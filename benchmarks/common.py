@@ -1,0 +1,44 @@
+"""Shared benchmark plumbing: timing, CSV artefacts, model/lever fixtures."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Callable, Dict, Iterable, List, Sequence, Tuple
+
+from repro.configs.paper_models import PAPER_MODELS, PARADIGM
+from repro.core import EnergyModel
+from repro.hw import H200_SXM, TPU_V5E
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "results/benchmarks")
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def write_csv(name: str, header: Sequence[str], rows: Iterable[Sequence]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        for r in rows:
+            w.writerow(r)
+    return path
+
+
+def paper_models():
+    return {k: v() for k, v in PAPER_MODELS.items()}
+
+
+def h200_model() -> EnergyModel:
+    return EnergyModel(H200_SXM)
+
+
+def v5e_model() -> EnergyModel:
+    return EnergyModel(TPU_V5E)

@@ -1,0 +1,53 @@
+"""Benchmark runner — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract) and
+writes per-table artefacts to results/benchmarks/*.csv.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig1_roofline,
+        fig2_heatmaps,
+        fig3_pareto,
+        fig4_request_energy,
+        hypotheses_bench,
+        kernels_micro,
+        policy_bench,
+        roofline_report,
+        table1_power_cap,
+        tpu_native,
+    )
+
+    benches = [
+        table1_power_cap,
+        fig1_roofline,
+        fig2_heatmaps,
+        fig3_pareto,
+        fig4_request_energy,
+        hypotheses_bench,
+        policy_bench,
+        tpu_native,
+        kernels_micro,
+        roofline_report,
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in benches:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{mod.__name__},-1,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"{failed} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Train a MiniCPM-style model with the WSD schedule, fault tolerance, and
+checkpoint/restart — the training-side example.
+
+Default: ~25M-param model, 60 steps (CPU-friendly). --hundred-m trains a
+~100M-param config for --steps steps (the full deliverable-scale run; on
+a pod swap the mesh via repro.launch).
+
+Run:  PYTHONPATH=src python examples/train_wsd.py [--hundred-m --steps 300]
+"""
+import argparse
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import ModelConfig, StageSpec, init_params
+from repro.training import (
+    AdamW,
+    DataConfig,
+    PackedLMStream,
+    PreemptionGuard,
+    StepWatchdog,
+    init_train_state,
+    latest_step,
+    make_train_step,
+    restore_checkpoint,
+    save_checkpoint,
+    wsd_schedule,
+)
+
+
+def small_minicpm(hundred_m: bool) -> ModelConfig:
+    base = get_config("minicpm-2b")
+    if hundred_m:
+        return dataclasses.replace(
+            base, name="minicpm-100m", d_model=512,
+            stages=(StageSpec(unit=("attn",), n_units=8),),
+            n_heads=8, n_kv_heads=8, head_dim=64, d_ff=1536,
+            vocab_size=32768, param_dtype="float32", compute_dtype="float32",
+        )
+    return dataclasses.replace(
+        base, name="minicpm-25m", d_model=256,
+        stages=(StageSpec(unit=("attn",), n_units=4),),
+        n_heads=4, n_kv_heads=4, head_dim=64, d_ff=768,
+        vocab_size=16384, param_dtype="float32", compute_dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hundred-m", action="store_true")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = small_minicpm(args.hundred_m)
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params), WSD schedule")
+
+    opt = AdamW()
+    sched = wsd_schedule(
+        6e-4, warmup_steps=max(args.steps // 10, 1),
+        stable_steps=int(args.steps * 0.7), decay_steps=max(args.steps // 5, 1),
+    )
+    step = jax.jit(make_train_step(cfg, opt, sched, remat=True), donate_argnums=(0,))
+
+    ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(), f"wsd_{cfg.name}")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = init_train_state(cfg, params, opt)
+    start = 0
+    last = latest_step(ckpt_dir)
+    if last:
+        state = restore_checkpoint(ckpt_dir, last, jax.eval_shape(lambda: state))
+        start = last
+        print(f"resumed from checkpoint step {last}")
+
+    data = PackedLMStream(cfg, DataConfig(seq_len=args.seq_len, batch_size=args.batch_size))
+    guard = PreemptionGuard(install=True)
+    wd = StepWatchdog(stall_factor=10.0, min_stall_s=300.0)
+    wd.start()
+    try:
+        for i in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+            state, m = step(state, batch)
+            wd.beat()
+            if (i + 1) % 10 == 0:
+                print(f"step {i+1:4d} loss {float(m['loss']):.4f} lr {float(m['lr']):.2e}")
+            if (i + 1) % 25 == 0 or guard.should_stop:
+                save_checkpoint(ckpt_dir, i + 1, state)
+            if guard.should_stop:
+                print("preempted: final checkpoint written, exiting cleanly")
+                return
+    finally:
+        wd.stop()
+    save_checkpoint(ckpt_dir, args.steps, state)
+    print(f"done; checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""The paper's contribution: phase-aware energy characterisation + DVFS policy.
+
+Layers:
+  workload    — analytic per-arch FLOPs/bytes/kernel-count vectors per phase
+  energy      — roofline-grounded P(f)*T(f) model (EnergyModel, StepProfile)
+  dvfs        — ClockLock (+ firmware clamp) and PowerCap (ceiling semantics)
+  policy      — DVFS classes + deployable per-arch clock table
+  pareto      — lock-vs-cap frontier and dominance tests
+  crossover   — total request energy vs output length
+  metering    — 50 ms sampling + trapezoidal integration methodology
+  hypotheses  — the paper's six formalised hypotheses
+  characterize— the full sweep driver
+"""
+from repro.core.workload import Workload, decode_workload, prefill_workload, model_flops_per_token
+from repro.core.energy import EnergyModel, StepProfile
+from repro.core.dvfs import ClockLock, Default, PowerCap, OperatingPoint, resolve
+from repro.core.policy import ClockChoice, PolicyRow, best_clock, classify_arch, min_energy_clock, policy_table
+from repro.core.pareto import ParetoPoint, cap_degeneracy, frontier, lock_dominates_caps, sweep_levers
+from repro.core.crossover import RequestEnergy, crossover_output_length, energy_curve, request_energy
+from repro.core.metering import (
+    CounterCrossValidator,
+    EnergyMeasurement,
+    EnergyMeter,
+    PowerSampler,
+    PowerTrace,
+    integrate_trace,
+)
+from repro.core.hypotheses import HypothesisResult, evaluate_hypotheses
+from repro.core.characterize import Record, characterize, filter_records, to_csv
+
+__all__ = [
+    "Workload", "decode_workload", "prefill_workload", "model_flops_per_token",
+    "EnergyModel", "StepProfile",
+    "ClockLock", "Default", "PowerCap", "OperatingPoint", "resolve",
+    "ClockChoice", "PolicyRow", "best_clock", "classify_arch", "min_energy_clock", "policy_table",
+    "ParetoPoint", "cap_degeneracy", "frontier", "lock_dominates_caps", "sweep_levers",
+    "RequestEnergy", "crossover_output_length", "energy_curve", "request_energy",
+    "CounterCrossValidator", "EnergyMeasurement", "EnergyMeter", "PowerSampler",
+    "PowerTrace", "integrate_trace",
+    "HypothesisResult", "evaluate_hypotheses",
+    "Record", "characterize", "filter_records", "to_csv",
+]

@@ -1,0 +1,5 @@
+from repro.kernels.decode_attn.decode_attn import decode_attention
+from repro.kernels.decode_attn.ops import gqa_decode_attention
+from repro.kernels.decode_attn.ref import decode_attention_ref
+
+__all__ = ["decode_attention", "gqa_decode_attention", "decode_attention_ref"]

@@ -1,0 +1,102 @@
+"""Flash-decode Pallas TPU kernel: online-softmax attention over a blocked
+KV cache for single-token decode.
+
+TPU mapping of the paper's critical decode path (§4.1): the cache never
+leaves HBM wholesale — it streams through VMEM in ``block_k``-row tiles
+while the (G, Dk) query tile and the (G, Dv) accumulator stay resident in
+VMEM scratch. Grid = (batch, kv_head, L/block_k); the KV-block axis is the
+innermost (sequential) dimension, so scratch carries the online-softmax
+state (m, l, acc) across blocks — the canonical TPU flash-decode schedule.
+
+Block shapes are MXU/VPU aligned: block_k is a multiple of 128 lanes; Dk/Dv
+land on the 128-lane minor dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _kernel(valid_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, block_k):
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, Dk)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (block_k, Dk)
+    v = v_ref[0, :, 0].astype(jnp.float32)            # (block_k, Dv)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                         # (G, block_k)
+
+    kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < valid_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]                               # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                            # (G, block_k)
+    corr = jnp.exp(m_prev - m_new)                    # (G, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,          # (B, H, Dk)
+    k: jax.Array,          # (B, L, KV, Dk)
+    v: jax.Array,          # (B, L, KV, Dv)
+    valid_len: jax.Array,  # (B,) int32
+    *,
+    scale: float,
+    block_k: int = 512,
+    interpret: bool = True,  # CPU container: interpret; False on real TPU
+) -> jax.Array:
+    b, h, dk = q.shape
+    l, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kv
+    assert l % block_k == 0, f"L={l} must be a multiple of block_k={block_k}"
+    nk = l // block_k
+
+    qg = q.reshape(b, kv, g, dk)
+    grid = (b, kv, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, ki, j: (bi,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, dk), lambda bi, ki, j: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, dk), lambda bi, ki, j: (bi, j, ki, 0)),
+            pl.BlockSpec((1, block_k, 1, dv), lambda bi, ki, j: (bi, j, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv), lambda bi, ki, j: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid_len, qg, k, v)
+    return out.reshape(b, h, dv)

@@ -1,0 +1,43 @@
+"""Jit'd public wrapper for the flash-decode kernel.
+
+``gqa_decode_attention`` adapts the model's cache layout
+((B, L, KV, hd) + per-request lengths) to the kernel and pads L to the
+block size. On CPU containers the kernel body runs in interpret mode;
+set ``interpret=False`` on real TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.decode_attn import decode_attention
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def gqa_decode_attention(
+    q: jax.Array,          # (B, 1, H, hd) or (B, H, hd)
+    k_cache: jax.Array,    # (B, L, KV, hd)
+    v_cache: jax.Array,    # (B, L, KV, hd)
+    valid_len: jax.Array,  # (B,)
+    *,
+    scale: float,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    l = k_cache.shape[1]
+    block_k = min(block_k, l) if l % min(block_k, l) == 0 else block_k
+    pad = (-l) % block_k
+    if pad:
+        cfg = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k_cache = jnp.pad(k_cache, cfg)
+        v_cache = jnp.pad(v_cache, cfg)
+    out = decode_attention(
+        q, k_cache, v_cache, valid_len,
+        scale=scale, block_k=block_k, interpret=interpret,
+    )
+    return out[:, None] if squeeze else out

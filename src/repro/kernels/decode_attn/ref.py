@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-decode kernel.
+
+Contract: one query row per request, KV cache with per-request valid
+lengths, grouped queries (H = KV * G), asymmetric K/V head dims allowed
+(MLA's absorbed form is the KV=1, Dk=rank+rope, Dv=rank special case).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def decode_attention_ref(
+    q: jax.Array,          # (B, H, Dk)
+    k: jax.Array,          # (B, L, KV, Dk)
+    v: jax.Array,          # (B, L, KV, Dv)
+    valid_len: jax.Array,  # (B,) int32 — attends to kpos < valid_len
+    scale: float,
+) -> jax.Array:            # (B, H, Dv)
+    b, h, dk = q.shape
+    l, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, dk)
+    scores = jnp.einsum(
+        "bkgd,blkd->bkgl", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    mask = (jnp.arange(l)[None, :] < valid_len[:, None])[:, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgl,blkd->bkgd", probs, v.astype(jnp.float32))
+    return ctx.reshape(b, h, v.shape[-1]).astype(q.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.gdn.gdn import gdn_scan
+from repro.kernels.gdn.ops import gdn_prefill
+from repro.kernels.gdn.ref import gdn_scan_ref
+
+__all__ = ["gdn_scan", "gdn_prefill", "gdn_scan_ref"]

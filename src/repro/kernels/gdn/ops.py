@@ -1,0 +1,34 @@
+"""Jit'd wrapper for the fused GDN kernel (padding + model layout)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gdn.gdn import gdn_scan
+
+
+@functools.partial(jax.jit, static_argnames=("q_chunk", "interpret"))
+def gdn_prefill(
+    q: jax.Array,       # (B, S, H, K)
+    k: jax.Array,
+    v: jax.Array,
+    beta: jax.Array,    # (B, S, H)
+    alpha: jax.Array,
+    *,
+    q_chunk: int = 64,
+    interpret: bool = True,
+):
+    bsz, s, h, kd = q.shape
+    q_chunk = min(q_chunk, s) if s % min(q_chunk, s) == 0 else q_chunk
+    pad = (-s) % q_chunk
+    if pad:
+        # beta=0 rows are exact no-ops (state untouched when alpha=1)
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        beta = jnp.pad(beta, ((0, 0), (0, pad), (0, 0)))
+        alpha = jnp.pad(alpha, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    y, fs = gdn_scan(q, k, v, beta, alpha, q_chunk=q_chunk, interpret=interpret)
+    return y[:, :s], fs

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fused GDN kernel: gated delta rule recurrence.
+
+S_t = alpha_t (S_{t-1} - beta_t k_t (k_t^T S_{t-1})) + beta_t k_t v_t^T
+y_t = S_t^T q_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gdn_scan_ref(
+    q: jax.Array,       # (B, S, H, K)
+    k: jax.Array,       # (B, S, H, K)
+    v: jax.Array,       # (B, S, H, K)
+    beta: jax.Array,    # (B, S, H)
+    alpha: jax.Array,   # (B, S, H)
+):
+    """-> y (B,S,H,K) fp32, final state (B,H,K,K) fp32."""
+    f32 = jnp.float32
+    q, k, v, beta, alpha = (t.astype(f32) for t in (q, k, v, beta, alpha))
+    bsz, s, h, kd = q.shape
+
+    def step(state, inp):
+        qt, kt, vt, bt, at = inp
+        ks = jnp.einsum("bhk,bhkv->bhv", kt, state)
+        state = at[..., None, None] * (
+            state - bt[..., None, None] * jnp.einsum("bhk,bhv->bhkv", kt, ks)
+        ) + bt[..., None, None] * jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        yt = jnp.einsum("bhkv,bhk->bhv", state, qt)
+        return state, yt
+
+    init = jnp.zeros((bsz, h, kd, kd), f32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, beta, alpha))
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1), final

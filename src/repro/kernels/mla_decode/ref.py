@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused MLA latent-decode kernel.
+
+This is the absorbed MLA attention over the COMPRESSED cache — the kernel
+the paper's §6.2 calls for ("a fused decompression kernel could eliminate
+most of this cost"): scores against [ckv; kr], values = ckv, so full K/V
+heads are never materialised.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def mla_latent_decode_ref(
+    q_lat: jax.Array,      # (B, H, rank)  — w_uk-absorbed nope queries
+    q_rope: jax.Array,     # (B, H, rope)
+    ckv: jax.Array,        # (B, L, rank)  — compressed latent cache
+    kr: jax.Array,         # (B, L, rope)  — shared rotary key cache
+    valid_len: jax.Array,  # (B,)
+    scale: float,
+) -> jax.Array:            # (B, H, rank) — latent context (w_uv applied outside)
+    s = jnp.einsum("bhr,blr->bhl", q_lat.astype(jnp.float32), ckv.astype(jnp.float32))
+    s += jnp.einsum("bhk,blk->bhl", q_rope.astype(jnp.float32), kr.astype(jnp.float32))
+    s *= scale
+    mask = (jnp.arange(ckv.shape[1])[None, :] < valid_len[:, None])[:, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhl,blr->bhr", p, ckv.astype(jnp.float32))
+    return ctx.astype(q_lat.dtype)

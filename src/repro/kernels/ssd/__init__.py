@@ -1,0 +1,5 @@
+from repro.kernels.ssd.ssd import ssd_scan
+from repro.kernels.ssd.ops import ssd_prefill
+from repro.kernels.ssd.ref import ssd_scan_ref
+
+__all__ = ["ssd_scan", "ssd_prefill", "ssd_scan_ref"]

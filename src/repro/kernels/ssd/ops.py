@@ -1,0 +1,43 @@
+"""Jit'd wrapper: drop-in fused SSD prefill for the model's ssm block.
+
+Handles padding to chunk multiples (dt=0 rows are exact no-ops) and head
+blocks, and returns (y, final_state) in the model's cache layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ssd import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("q_chunk", "head_block", "interpret"))
+def ssd_prefill(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)
+    a: jax.Array,      # (H,)
+    b: jax.Array,      # (B, S, N)
+    c: jax.Array,      # (B, S, N)
+    *,
+    q_chunk: int = 128,
+    head_block: int = 8,
+    interpret: bool = True,
+):
+    bsz, s, h, p = x.shape
+    q_chunk = min(q_chunk, s) if s % min(q_chunk, s) == 0 else q_chunk
+    head_block = min(head_block, h)
+    while h % head_block:
+        head_block -= 1
+    pad = (-s) % q_chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    y, fs = ssd_scan(
+        x, dt, a, b, c,
+        q_chunk=q_chunk, head_block=head_block, interpret=interpret,
+    )
+    return y[:, :s], fs

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the chunked SSD kernel: the sequential recurrence.
+
+h_t = h_{t-1} * exp(dt_t * a) + dt_t * b_t (x) x_t ;  y_t = c_t . h_t
+(one B/C group shared across heads, matching the assigned SSM configs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    x: jax.Array,     # (B, S, H, P)
+    dt: jax.Array,    # (B, S, H)  — positive
+    a: jax.Array,     # (H,)       — negative decay rates
+    b: jax.Array,     # (B, S, N)  — single group
+    c: jax.Array,     # (B, S, N)
+):
+    """-> y (B, S, H, P) fp32, final state (B, H, P, N) fp32."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    f32 = jnp.float32
+    x, dt, b, c = (t.astype(f32) for t in (x, dt, b, c))
+    a = a.astype(f32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp          # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * a[None, :])                     # (B,H)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt, bt, xt
+        )
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    init = jnp.zeros((bsz, h, p, n), f32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (x, dt, b, c))
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1), final

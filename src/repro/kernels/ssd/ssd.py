@@ -1,0 +1,113 @@
+"""Chunked SSD (Mamba2) Pallas kernel — the fused recurrent prefill the
+paper's §7.2 predicts would close the order-of-magnitude gap.
+
+TPU mapping of the SSD duality: within a chunk of Q tokens the recurrence
+is computed as dense (Q x Q)/(Q x N) matmuls on the MXU (intra-chunk
+"attention-like" term), while the cross-chunk state (hb, P, N) is carried
+in VMEM scratch across the sequential chunk axis — one HBM pass over the
+inputs, no per-token state round-trips (the eager baseline's downfall).
+
+Grid = (B, H/hb, S/Q); chunk axis innermost/sequential. Requires a single
+B/C group (all assigned SSM configs use ssm_groups=1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fs_ref, state_ref, *, q_chunk):
+    z = pl.program_id(2)
+    nz = pl.num_programs(2)
+
+    @pl.when(z == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    f32 = jnp.float32
+    x = x_ref[0].astype(f32)          # (Q, hb, P)
+    dt = dt_ref[0].astype(f32)        # (Q, hb)
+    a = a_ref[...].astype(f32)        # (hb,)
+    bm = b_ref[0].astype(f32)         # (Q, N)
+    cm = c_ref[0].astype(f32)         # (Q, N)
+
+    da = dt * a[None, :]              # (Q, hb) log-decays
+    cum = jnp.cumsum(da, axis=0)      # inclusive
+    chunk_decay = cum[-1]             # (hb,)
+
+    # intra-chunk: y_i += sum_{j<=i} (c_i.b_j) exp(cum_i-cum_j) dt_j x_j
+    cb = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=f32
+    )                                  # (Q, Q)
+    li = cum[:, None, :]
+    lj = cum[None, :, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, q_chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, q_chunk), 1)
+    causal = (iota_i >= iota_j)[:, :, None]
+    # mask inside the exp: masked exponents are large-positive (overflow)
+    w = cb[:, :, None] * jnp.exp(jnp.where(causal, li - lj, -jnp.inf))  # (Q,Q,hb)
+    w = w * dt[None, :, :]
+    y = jnp.einsum("ijh,jhp->ihp", w, x)
+
+    # inter-chunk: y_i += exp(cum_i) * c_i . state
+    state = state_ref[...]                                          # (hb,P,N)
+    y += jnp.einsum("in,hpn->ihp", cm, state) * jnp.exp(cum)[:, :, None]
+
+    # state pass: state = state*exp(chunk_decay) + sum_j exp(cd-cum_j) dt_j b_j x_j
+    to_end = jnp.exp(chunk_decay[None, :] - cum) * dt               # (Q,hb)
+    sloc = jnp.einsum("jh,jn,jhp->hpn", to_end, bm, x)
+    state_ref[...] = state * jnp.exp(chunk_decay)[:, None, None] + sloc
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(z == nz - 1)
+    def _emit_state():
+        fs_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("q_chunk", "head_block", "interpret"))
+def ssd_scan(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)
+    a: jax.Array,      # (H,)
+    b: jax.Array,      # (B, S, N) — single group
+    c: jax.Array,      # (B, S, N)
+    *,
+    q_chunk: int = 128,
+    head_block: int = 8,
+    interpret: bool = True,
+):
+    """-> (y (B,S,H,P), final_state (B,H,P,N) fp32)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % q_chunk == 0, f"S={s} not a multiple of q_chunk={q_chunk}"
+    assert h % head_block == 0, f"H={h} not a multiple of head_block={head_block}"
+    nz = s // q_chunk
+    nhb = h // head_block
+
+    y, final_state = pl.pallas_call(
+        functools.partial(_kernel, q_chunk=q_chunk),
+        grid=(bsz, nhb, nz),
+        in_specs=[
+            pl.BlockSpec((1, q_chunk, head_block, p), lambda bi, hi, z: (bi, z, hi, 0)),
+            pl.BlockSpec((1, q_chunk, head_block), lambda bi, hi, z: (bi, z, hi)),
+            pl.BlockSpec((head_block,), lambda bi, hi, z: (hi,)),
+            pl.BlockSpec((1, q_chunk, n), lambda bi, hi, z: (bi, z, 0)),
+            pl.BlockSpec((1, q_chunk, n), lambda bi, hi, z: (bi, z, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_chunk, head_block, p), lambda bi, hi, z: (bi, z, hi, 0)),
+            pl.BlockSpec((1, head_block, p, n), lambda bi, hi, z: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((head_block, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)
+    return y, final_state

@@ -1,0 +1,23 @@
+"""Launch layer: production mesh, sharding rules, dry-run, drivers."""
+from repro.launch.mesh import make_production_mesh, make_host_mesh, data_axes
+from repro.launch.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    state_shardings,
+)
+from repro.launch.hlo_stats import collective_stats, shape_bytes, dup_op_histogram
+from repro.launch.specs import (
+    abstract_decode_cache,
+    abstract_prefill_cache,
+    abstract_train_state,
+    input_specs,
+)
+
+__all__ = [
+    "make_production_mesh", "make_host_mesh", "data_axes",
+    "batch_shardings", "cache_shardings", "param_shardings", "state_shardings",
+    "collective_stats", "shape_bytes", "dup_op_histogram",
+    "abstract_decode_cache", "abstract_prefill_cache", "abstract_train_state",
+    "input_specs",
+]

@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) cell:
+  jit(step).lower(**abstract_inputs).compile()
+on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh, recording
+memory_analysis(), cost_analysis(), and the collective schedule parsed from
+the compiled HLO — the §Roofline inputs. Results are cached as JSON per
+cell (resumable; --force re-runs).
+
+The XLA_FLAGS line above MUST stay the first statement: jax locks the host
+device count on first backend init. Smoke tests and benches never import
+this module, so they see 1 device.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config, get_shape, shape_applicable, ALL_SHAPES
+from repro.core.workload import model_flops_per_token
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    state_shardings,
+)
+from repro.launch.specs import (
+    abstract_decode_cache,
+    abstract_prefill_cache,
+    abstract_train_state,
+    input_specs,
+)
+from repro.models import abstract_params, decode_step, prefill
+from repro.training.optimizer import AdamW, wsd_schedule
+from repro.training.train import make_train_step
+
+DEFAULT_OUT = "results/dryrun"
+
+
+def build_lowered(arch: str, shape_name: str, *, multi_pod: bool, remat: bool = True,
+                  microbatches: int = 1, mesh=None, unroll: bool = False):
+    """-> (lowered, meta) for one cell. ``mesh`` overrides the production
+    mesh (integration tests use small host meshes). ``unroll=True`` switches
+    the model to the exact-accounting lowering (python-looped layers,
+    unrolled inner scans) — XLA cost analysis counts while bodies once, so
+    the scanned lowering under-reports in-loop FLOPs/bytes/collectives."""
+    from repro.models.sharding_hints import set_activation_batch_axes
+    from repro.models.unroll import set_unroll
+    from repro.launch.mesh import data_axes
+    from repro.launch.sharding import needs_fsdp
+
+    set_unroll(unroll)
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    specs = input_specs(cfg, shape)
+    fsdp = needs_fsdp(cfg, mesh)
+
+    # batch-shardable? (decode long_500k has batch 1 — no constraint)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = data_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= sizes[a]
+    batch_ok = shape.global_batch % dp_total == 0
+    set_activation_batch_axes(dp if batch_ok else None)
+
+    try:
+        with jax.set_mesh(mesh):
+            if shape.kind == "train":
+                opt = AdamW()
+                sched = wsd_schedule(3e-4, 100, 10_000, 1_000)
+                step = make_train_step(cfg, opt, sched, remat=remat, microbatches=microbatches)
+                state = abstract_train_state(cfg, opt)
+                batch = {k: v for k, v in specs.items()}
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(
+                        state_shardings(state, mesh, fsdp=fsdp),
+                        batch_shardings(batch, mesh),
+                    ),
+                    donate_argnums=(0,),
+                )
+                lowered = jitted.lower(state, batch)
+                tokens = shape.global_batch * shape.seq_len
+
+            elif shape.kind == "prefill":
+                params = abstract_params(cfg)
+                cache = abstract_prefill_cache(cfg, shape)
+
+                if cfg.n_media_tokens:
+                    def step(params, inputs, cache, enc_states):
+                        return prefill(params, cfg, inputs, cache, enc_states=enc_states)
+                    args = (params, specs["inputs"], cache, specs["enc_states"])
+                    in_sh = (
+                        param_shardings(params, mesh, fsdp=fsdp),
+                        batch_shardings(specs["inputs"], mesh),
+                        cache_shardings(cache, mesh),
+                        batch_shardings(specs["enc_states"], mesh),
+                    )
+                else:
+                    def step(params, inputs, cache):
+                        return prefill(params, cfg, inputs, cache)
+                    args = (params, specs["inputs"], cache)
+                    in_sh = (
+                        param_shardings(params, mesh, fsdp=fsdp),
+                        batch_shardings(specs["inputs"], mesh),
+                        cache_shardings(cache, mesh),
+                    )
+                jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=(2,))
+                lowered = jitted.lower(*args)
+                tokens = shape.global_batch * shape.seq_len
+
+            elif shape.kind == "decode":
+                params = abstract_params(cfg)
+                cache = abstract_decode_cache(cfg, shape)
+
+                def step(params, token, cache, lengths):
+                    return decode_step(params, cfg, token, cache, lengths)
+
+                args = (params, specs["token"], cache, specs["lengths"])
+                in_sh = (
+                    param_shardings(params, mesh, fsdp=fsdp),
+                    batch_shardings(specs["token"], mesh),
+                    cache_shardings(cache, mesh),
+                    batch_shardings(specs["lengths"], mesh),
+                )
+                jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=(2,))
+                lowered = jitted.lower(*args)
+                tokens = shape.global_batch
+
+            else:
+                raise ValueError(shape.kind)
+    finally:
+        set_activation_batch_axes(None)
+
+    meta = {
+        "cfg": cfg, "shape": shape, "mesh": mesh,
+        "tokens_per_step": tokens, "fsdp": fsdp,
+    }
+    return lowered, meta
+
+
+def _mem_analysis_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+    out = {}
+    for field in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             force: bool = False, keep_hlo: bool = False,
+             unroll: bool = False) -> Dict[str, Any]:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "__unrolled" if unroll else ""
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = shape_applicable(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_devices": 512 if multi_pod else 256,
+        "applicable": ok,
+        "unrolled_accounting": unroll,
+    }
+    if not ok:
+        rec["skip_reason"] = reason
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    try:
+        t0 = time.time()
+        lowered, meta = build_lowered(arch, shape_name, multi_pod=multi_pod, unroll=unroll)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        cost = compiled.cost_analysis() or {}
+        mem = _mem_analysis_dict(compiled)
+        try:
+            hlo = compiled.as_text()
+        except Exception:  # noqa: BLE001
+            hlo = lowered.as_text()
+        coll = collective_stats(hlo)
+
+        tokens = meta["tokens_per_step"]
+        mf = model_flops_per_token(cfg)
+        rec.update(
+            {
+                "ok": True,
+                "t_lower_s": round(t_lower, 2),
+                "t_compile_s": round(t_compile, 2),
+                "tokens_per_step": tokens,
+                "hlo_flops_per_device": float(cost.get("flops", 0.0)),
+                "hlo_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+                "cost_analysis_keys": sorted(cost)[:40],
+                "memory_analysis": mem,
+                "collective_bytes_per_device": coll.total_bytes,
+                "collective_count": coll.total_count,
+                "collective_bytes_by_op": coll.bytes_by_op,
+                "collective_count_by_op": coll.count_by_op,
+                "model_flops_per_token": mf,
+            }
+        )
+        # model flops per step: train = 6*N_active*tokens (fwd+bwd);
+        # inference steps = 2*N_active*tokens (fwd only)
+        rec["model_flops_per_step"] = mf * tokens * (1.0 if shape.kind == "train" else 1.0 / 3.0)
+        if keep_hlo:
+            hpath = path.replace(".json", ".hlo.txt")
+            with open(hpath, "w") as f:
+                f.write(hlo)
+            rec["hlo_path"] = hpath
+    except Exception as e:  # noqa: BLE001
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="architecture id (default: all assigned)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="exact-accounting lowering (slower compile)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_cell(
+                    arch, shape_name, multi_pod=mp, out_dir=args.out,
+                    force=args.force, keep_hlo=args.keep_hlo, unroll=args.unroll,
+                )
+                status = (
+                    "SKIP" if not rec.get("applicable", True)
+                    else ("OK" if rec.get("ok") else "FAIL")
+                )
+                if status == "FAIL":
+                    n_fail += 1
+                    print(f"[{status}] {arch} {shape_name} {rec['mesh']}: {rec.get('error')}")
+                elif status == "SKIP":
+                    print(f"[{status}] {arch} {shape_name} {rec['mesh']}: {rec.get('skip_reason')}")
+                else:
+                    print(
+                        f"[{status}] {arch} {shape_name} {rec['mesh']}: "
+                        f"lower {rec['t_lower_s']}s compile {rec['t_compile_s']}s "
+                        f"flops/dev {rec['hlo_flops_per_device']:.3e} "
+                        f"coll {rec['collective_bytes_per_device']/1e6:.1f}MB "
+                        f"({rec['collective_count']} ops)"
+                    )
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

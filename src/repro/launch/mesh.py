@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (jax locks the device count on first backend
+init, and only launch/dryrun.py is allowed to set the 512-device flag).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model_axis: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    data_axis = n // model_axis
+    return jax.make_mesh((data_axis, model_axis), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Mesh axes that carry the batch (grad-reduction axes)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,248 @@
+"""Sharding rules engine: param/cache/batch pytrees -> NamedShardings.
+
+Rules are ordered (mesh_axis, tensor_dim) preferences keyed by leaf name
+(and ndim where names collide). The engine assigns greedily, skipping any
+assignment whose dimension is not divisible by the mesh axis size — so the
+same table serves every architecture (gemma-2b's kv=1 MQA, deepseek's 128
+heads, mamba2's head counts) and both mesh shapes. Unknown leaves fall back
+to largest-dim-over-'model'.
+
+Design notes (DESIGN.md §5): params are 2-D sharded (TP dim over 'model',
+complementary dim over 'data' = FSDP-style; XLA SPMD inserts the gathers);
+decode caches shard batch over the data axes and the *sequence* axis over
+'model' — kv-head counts in the pool (1, 8, 32, 36) are mostly not
+divisible by 16, sequence always is. Params are replicated across pods;
+activations/batch shard over ('pod', 'data').
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------- rule table
+# name (regex) -> list of (mesh_axis_role, dim) preferences. Roles: "model"
+# or "data"; dim indices are AFTER stripping the leading n_units stack dim.
+# The first applicable preference per mesh axis wins.
+_PARAM_RULES: List[Tuple[str, Optional[int], List[Tuple[str, int]]]] = [
+    # (name_pattern, ndim or None=any, preferences)
+    (r"table$", 2, [("model", 0), ("data", 1), ("model", 1)]),
+    (r"(wq|wk|wv)$", 3, [("model", 1), ("data", 0), ("model", 0), ("model", 2)]),
+    (r"(wo|w_o)$", 3, [("model", 0), ("data", 2), ("model", 2)]),
+    (r"w_gate$", 3, [("model", 1), ("data", 0)]),          # gdn output gate
+    (r"(w_gate|w_up)$", 2, [("model", 1), ("data", 0)]),   # mlp
+    (r"w_down$", 2, [("model", 0), ("data", 1)]),
+    (r"router$", 2, [("model", 1), ("data", 0)]),
+    (r"(w_gate|w_up)$", 3, [("model", 0), ("data", 1)]),   # moe experts (E,d,ff)
+    (r"w_down$", 3, [("model", 0), ("data", 2)]),          # moe (E,ff,d)
+    (r"(w_uk|w_uv|w_uq)$", 3, [("model", 1), ("data", 0), ("model", 0)]),
+    (r"(w_dkv|w_dq|w_kr)$", 2, [("model", 1), ("data", 0), ("model", 0)]),
+    (r"w_in$", 2, [("model", 1), ("data", 0)]),
+    (r"conv_w$", 2, [("model", 1)]),
+    (r"(conv_b)$", 1, [("model", 0)]),
+    (r"(a_log|d_skip|dt_bias)$", 1, [("model", 0)]),
+    (r"(w_beta|w_alpha)$", 2, [("model", 1), ("data", 0)]),
+    (r"w_out$", 2, [("model", 0), ("data", 1)]),
+    (r"scale$", 1, []),                                    # norms: replicate
+    (r"gate$", 0, []),
+]
+
+_CACHE_RULES: List[Tuple[str, Optional[int], List[Tuple[str, int]]]] = [
+    (r"[/.]?(k|v)$", 4, [("data", 0), ("model", 1), ("data", 1)]),   # (B,L,KV,hd)
+    (r"(ckv)$", 3, [("data", 0), ("model", 1), ("data", 1)]),        # (B,L,rank)
+    (r"(kr)$", 3, [("data", 0), ("model", 1), ("data", 1)]),
+    (r"(ssm)$", 4, [("data", 0), ("model", 1)]),                     # (B,H,P,N)
+    (r"(conv)$", 3, [("data", 0), ("model", 2)]),                    # (B,K-1,C)
+    (r"(gdn)$", 4, [("data", 0), ("model", 1)]),                     # (B,H,K,K)
+]
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _role_axes(mesh: Mesh, role: str) -> Tuple[str, ...]:
+    """'data' role covers ('pod','data') on multi-pod meshes for batch-like
+    dims; for params the 'data' role is the 'data' axis only (params are
+    replicated across pods)."""
+    if role == "model":
+        return ("model",)
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _assign(
+    shape: Sequence[int],
+    prefs: List[Tuple[str, int]],
+    mesh: Mesh,
+    *,
+    data_axes_combined: bool,
+) -> P:
+    sizes = _mesh_axis_sizes(mesh)
+    dims: List[Any] = [None] * len(shape)
+    used_mesh: set = set()
+    for role, dim in prefs:
+        if dim >= len(shape):
+            continue
+        if role == "data" and data_axes_combined:
+            axes = _role_axes(mesh, "data")
+        else:
+            axes = (role,) if role in sizes else ()
+        axes = tuple(a for a in axes if a not in used_mesh)
+        if not axes:
+            continue
+        total = int(np.prod([sizes[a] for a in axes]))
+        if dims[dim] is not None or total == 0:
+            continue
+        if shape[dim] % total == 0 and shape[dim] > 0:
+            dims[dim] = axes if len(axes) > 1 else axes[0]
+            used_mesh.update(axes)
+        elif len(axes) > 1:
+            # try just the plain 'data' axis
+            a = axes[-1]
+            if shape[dim] % sizes[a] == 0:
+                dims[dim] = a
+                used_mesh.add(a)
+    return P(*dims)
+
+
+def _fallback_spec(shape: Sequence[int], mesh: Mesh) -> P:
+    """Largest-dim over 'model', second-largest over 'data'."""
+    sizes = _mesh_axis_sizes(mesh)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    dims: List[Any] = [None] * len(shape)
+    roles = ["model", "data"]
+    for dim in order:
+        if not roles:
+            break
+        role = roles[0]
+        if role in sizes and shape[dim] % sizes[role] == 0 and shape[dim] >= sizes[role]:
+            dims[dim] = role
+            roles.pop(0)
+    return P(*dims)
+
+
+def _match(rules, name: str, ndim: int):
+    for pat, nd, prefs in rules:
+        if re.search(pat, name) and (nd is None or nd == ndim):
+            return prefs
+    return None
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def _spec_for_leaf(
+    path, leaf, mesh: Mesh, rules, *, stacked_under_stages: bool, data_axes_combined: bool
+) -> P:
+    name = _leaf_name(path)
+    shape = tuple(leaf.shape)
+    lead_none = 0
+    if stacked_under_stages and "stages" in name:
+        lead_none = 1
+        shape = shape[1:]
+    if len(shape) == 0:
+        return P()
+    key = name.split("/")[-1]
+    prefs = _match(rules, key, len(shape))
+    if prefs is None:
+        spec = _fallback_spec(shape, mesh)
+    else:
+        spec = _assign(shape, prefs, mesh, data_axes_combined=data_axes_combined)
+    return P(*([None] * lead_none), *spec)
+
+
+def _drop_data(prefs):
+    return [(role, dim) for role, dim in prefs if role != "data"]
+
+
+def param_shardings(params_like: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """NamedSharding tree for params (works on concrete or abstract trees).
+
+    ``fsdp=False`` drops the 'data'-axis (ZeRO-style) dimension from every
+    rule: small models keep params replicated across data and sharded over
+    'model' only — avoiding the batch-vs-FSDP axis conflict that otherwise
+    makes XLA replicate activations (§Perf iteration 2). Use FSDP only when
+    params+optimizer do not fit model-parallel sharding alone.
+    """
+    rules = _PARAM_RULES if fsdp else [
+        (pat, nd, _drop_data(prefs)) for pat, nd, prefs in _PARAM_RULES
+    ]
+
+    def f(path, leaf):
+        spec = _spec_for_leaf(
+            path, leaf, mesh, rules,
+            stacked_under_stages=True, data_axes_combined=False,
+        )
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(f, params_like)
+
+
+def cache_shardings(cache_like: Any, mesh: Mesh) -> Any:
+    def f(path, leaf):
+        spec = _spec_for_leaf(
+            path, leaf, mesh, _CACHE_RULES,
+            stacked_under_stages=True, data_axes_combined=True,
+        )
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(f, cache_like)
+
+
+def batch_shardings(batch_like: Any, mesh: Mesh) -> Any:
+    """Batch-dim-0 sharding over ('pod','data') with divisibility fallback."""
+    dp = _role_axes(mesh, "data")
+    sizes = _mesh_axis_sizes(mesh)
+    total = int(np.prod([sizes[a] for a in dp]))
+
+    def f(leaf):
+        shape = tuple(leaf.shape)
+        if shape and shape[0] % total == 0:
+            spec = P(dp if len(dp) > 1 else dp[0], *([None] * (len(shape) - 1)))
+        elif shape and len(dp) > 1 and shape[0] % sizes["data"] == 0:
+            spec = P("data", *([None] * (len(shape) - 1)))
+        else:
+            spec = P(*([None] * len(shape)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(f, batch_like)
+
+
+def state_shardings(state_like: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """TrainState: params/mu/nu/error_buf shard like params; scalars replicate."""
+    rules = _PARAM_RULES if fsdp else [
+        (pat, nd, _drop_data(prefs)) for pat, nd, prefs in _PARAM_RULES
+    ]
+
+    def f(path, leaf):
+        if len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        spec = _spec_for_leaf(
+            path, leaf, mesh, rules,
+            stacked_under_stages=True, data_axes_combined=False,
+        )
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(f, state_like)
+
+
+def needs_fsdp(cfg, mesh: Mesh, budget_bytes: float = 8e9) -> bool:
+    """FSDP ('data'-axis param sharding) only when bf16 params + fp32 Adam
+    moments exceed the per-device budget under model-only sharding."""
+    sizes = _mesh_axis_sizes(mesh)
+    model_ways = sizes.get("model", 1)
+    per_dev = cfg.param_count() * (2 + 4 + 4) / model_ways
+    return per_dev > budget_bytes
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

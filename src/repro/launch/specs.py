@@ -1,0 +1,66 @@
+"""Abstract input/state/cache specs for the dry-run (ShapeDtypeStruct only —
+no device allocation; the shannon/kernels pattern)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import abstract_cache, abstract_params
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamW
+from repro.training.train import init_train_state
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    cd = jnp.dtype(cfg.compute_dtype)
+    i32 = jnp.int32
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        if cfg.input_is_embeddings:
+            out["inputs"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cd)
+        else:
+            out["inputs"] = jax.ShapeDtypeStruct((b, s), i32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.n_media_tokens:
+            out["enc_states"] = jax.ShapeDtypeStruct((b, cfg.n_media_tokens, cfg.d_model), cd)
+    elif shape.kind == "prefill":
+        if cfg.input_is_embeddings:
+            out["inputs"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cd)
+        else:
+            out["inputs"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.n_media_tokens:
+            out["enc_states"] = jax.ShapeDtypeStruct((b, cfg.n_media_tokens, cfg.d_model), cd)
+    elif shape.kind == "decode":
+        if cfg.input_is_embeddings:
+            out["token"] = jax.ShapeDtypeStruct((b, 1, cfg.d_model), cd)
+        else:
+            out["token"] = jax.ShapeDtypeStruct((b,), i32)
+        out["lengths"] = jax.ShapeDtypeStruct((b,), i32)
+    else:
+        raise ValueError(shape.kind)
+    return out
+
+
+def abstract_decode_cache(cfg: ModelConfig, shape: ShapeSpec):
+    # decode_32k/long_500k: cache sized to seq_len; the step writes token
+    # seq_len-1 -> valid semantics for "cache of seq_len with one new token"
+    return abstract_cache(cfg, shape.global_batch, shape.seq_len)
+
+
+def abstract_prefill_cache(cfg: ModelConfig, shape: ShapeSpec):
+    return abstract_cache(cfg, shape.global_batch, shape.seq_len)
+
+
+def abstract_train_state(cfg: ModelConfig, optimizer: AdamW | None = None):
+    optimizer = optimizer or AdamW()
+    params = abstract_params(cfg)
+
+    def ctor(p):
+        return init_train_state(cfg, p, optimizer)
+
+    return jax.eval_shape(ctor, params)

@@ -1,0 +1,134 @@
+"""Training driver: fault-tolerant loop around the pure train step.
+
+Production shape: mesh -> sharded state -> jit(train_step) -> loop with
+watchdog heartbeats, preemption-safe checkpointing, and crash-restart from
+the latest complete checkpoint. On this CPU container it runs reduced
+configs end-to-end (examples/train_smoke.py); on a pod the same driver
+scales by swapping the mesh and config.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import batch_shardings, state_shardings
+from repro.models import init_params
+from repro.training import (
+    AdamW,
+    DataConfig,
+    PackedLMStream,
+    PreemptionGuard,
+    StepWatchdog,
+    init_train_state,
+    latest_step,
+    make_train_step,
+    restore_checkpoint,
+    save_checkpoint,
+    wsd_schedule,
+)
+
+
+def run_training(
+    *,
+    arch: str,
+    steps: int = 50,
+    batch_size: int = 8,
+    seq_len: int = 128,
+    reduced: bool = True,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 20,
+    microbatches: int = 1,
+    peak_lr: float = 3e-4,
+    seed: int = 0,
+    log_every: int = 10,
+    use_mesh: bool = False,
+    compression: bool = False,
+) -> dict:
+    cfg = reduced_config(arch) if reduced else get_config(arch)
+    opt = AdamW()
+    sched = wsd_schedule(peak_lr, max(steps // 10, 1), int(steps * 0.7), max(steps // 5, 1))
+    step_fn = make_train_step(
+        cfg, opt, sched, microbatches=microbatches, remat=True, compression=compression
+    )
+
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    state = init_train_state(cfg, params, opt, compression=compression)
+
+    if use_mesh:
+        mesh = make_host_mesh()
+        st_sh = state_shardings(state, mesh)
+        state = jax.device_put(state, st_sh)
+        jitted = jax.jit(step_fn, in_shardings=(st_sh, None), donate_argnums=(0,))
+    else:
+        jitted = jax.jit(step_fn, donate_argnums=(0,))
+
+    start = 0
+    if checkpoint_dir:
+        last = latest_step(checkpoint_dir)
+        if last is not None:
+            like = jax.eval_shape(lambda: state)
+            state = restore_checkpoint(checkpoint_dir, last, like)
+            start = last
+            print(f"[train] resumed from step {last}")
+
+    data = PackedLMStream(cfg, DataConfig(seq_len=seq_len, batch_size=batch_size, seed=seed))
+    guard = PreemptionGuard(install=False)
+    watchdog = StepWatchdog(stall_factor=10.0, min_stall_s=120.0)
+    losses = []
+    t0 = time.time()
+    for i in range(start, steps):
+        batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        state, metrics = jitted(state, batch)
+        watchdog.beat()
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % log_every == 0:
+            print(f"[train] step {i+1}/{steps} loss={losses[-1]:.4f} "
+                  f"lr={float(metrics['lr']):.2e} gnorm={float(metrics['grad_norm']):.3f}")
+        if checkpoint_dir and ((i + 1) % checkpoint_every == 0 or guard.should_stop):
+            save_checkpoint(checkpoint_dir, i + 1, state)
+        if guard.should_stop:
+            print("[train] preempted; checkpointed and exiting cleanly")
+            break
+    wall = time.time() - t0
+    return {
+        "steps": len(losses),
+        "first_loss": losses[0] if losses else None,
+        "last_loss": losses[-1] if losses else None,
+        "wall_s": wall,
+        "straggler_events": len(watchdog.straggler_events),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", action="store_true")
+    args = ap.parse_args()
+    out = run_training(
+        arch=args.arch,
+        steps=args.steps,
+        batch_size=args.batch_size,
+        seq_len=args.seq_len,
+        reduced=not args.full_config,
+        checkpoint_dir=args.checkpoint_dir,
+        microbatches=args.microbatches,
+        compression=args.compression,
+    )
+    print(f"[train] done: {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Model zoo: config schema, layers, attention paradigms, assembly."""
+from repro.models.config import ModelConfig, StageSpec, kv_cache_bytes_per_token
+from repro.models.model import (
+    abstract_cache,
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    logits,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "StageSpec",
+    "kv_cache_bytes_per_token",
+    "abstract_cache",
+    "abstract_params",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "logits",
+    "prefill",
+]

@@ -1,0 +1,261 @@
+"""Blocked (flash-style) attention in pure JAX with a custom VJP.
+
+Used by prefill/train paths whenever S is large enough that materialising
+the (S, L) score matrix would break the per-device memory budget; decode
+paths (1-row queries) never need it. The double ``lax.scan`` (outer over
+query blocks, inner over key blocks) bounds live intermediates to one
+(q_block, kv_block) tile per (batch, head) — the same working-set shape the
+Pallas kernels use on real hardware, so the dry-run memory analysis reflects
+production behaviour.
+
+Supports GQA (kv_heads | heads), asymmetric K/V head dims (which is exactly
+MLA's absorbed decode/prefill form: kv_heads=1, Dk = kv_lora+rope,
+Dv = kv_lora), sliding windows, and logit softcapping — everything the
+assigned architecture pool requires.
+
+The custom VJP recomputes score tiles in the backward pass (never storing
+S x L), carrying dK/dV as scan state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.unroll import scan_unroll_arg
+
+NEG_INF = -2.3819763e38
+
+
+def _pad_to(x, size, axis):
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _block_mask(qpos, kpos, causal: bool, window: int):
+    """(qb, kb) boolean mask."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    return m
+
+
+def _scores(qg, kb, scale, softcap):
+    """qg (B,qb,KV,G,Dk), kb (B,kb,KV,Dk) -> (B,KV,G,qb,kb) fp32 capped."""
+    s = jnp.einsum("bqkgd,blkd->bkgql", qg, kb, preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
+)
+def flash_attention(
+    q: jax.Array,            # (B, S, H, Dk)
+    k: jax.Array,            # (B, L, KV, Dk)
+    v: jax.Array,            # (B, L, KV, Dv)
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_block: int = 512,
+    kv_block: int = 512,
+) -> jax.Array:
+    o, _ = _flash_fwd_impl(q, k, v, scale, causal, window, softcap, q_block, kv_block)
+    return o
+
+
+def _flash_fwd_impl(q, k, v, scale, causal, window, softcap, q_block, kv_block):
+    b, s, h, dk = q.shape
+    l, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kv
+
+    s_pad = int(np.ceil(s / q_block)) * q_block
+    l_pad = int(np.ceil(l / kv_block)) * kv_block
+    qp = _pad_to(q, s_pad, 1).reshape(b, s_pad // q_block, q_block, kv, g, dk)
+    kp = _pad_to(k, l_pad, 1)
+    vp = _pad_to(v, l_pad, 1)
+    nq, nk = s_pad // q_block, l_pad // kv_block
+
+    def q_body(_, qi):
+        qb = qp[:, qi]                                   # (B,qb,KV,G,Dk)
+        qpos = qi * q_block + jnp.arange(q_block)
+
+        def kv_body(carry, ki):
+            m, lse_acc, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(kp, ki * kv_block, kv_block, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, ki * kv_block, kv_block, 1)
+            kpos = ki * kv_block + jnp.arange(kv_block)
+            sc = _scores(qb, kb, scale, softcap)         # (B,KV,G,qb,kb)
+            mask = _block_mask(qpos, kpos, causal, window) & (kpos < l)[None, :]
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            lse_acc = lse_acc * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgql,blkd->bkgqd", p.astype(vb.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, lse_acc, acc), None
+
+        init = (
+            jnp.full((b, kv, g, q_block), NEG_INF, dtype=jnp.float32),
+            jnp.zeros((b, kv, g, q_block), dtype=jnp.float32),
+            jnp.zeros((b, kv, g, q_block, dv), dtype=jnp.float32),
+        )
+        (m, lse_acc, acc), _ = jax.lax.scan(kv_body, init, jnp.arange(nk), unroll=scan_unroll_arg())
+        o_blk = acc / jnp.maximum(lse_acc, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(lse_acc, 1e-30))   # (B,KV,G,qb)
+        return None, (o_blk, lse)
+
+    _, (o_blocks, lse_blocks) = jax.lax.scan(q_body, None, jnp.arange(nq), unroll=scan_unroll_arg())
+    # o_blocks: (nq, B, KV, G, qb, Dv) -> (B, S, H, Dv)
+    o = jnp.moveaxis(o_blocks, 0, 1).transpose(0, 1, 4, 2, 3, 5)
+    o = o.reshape(b, s_pad, h, dv)[:, :s].astype(q.dtype)
+    lse = jnp.moveaxis(lse_blocks, 0, 1).transpose(0, 1, 4, 2, 3)  # (B,nq,qb,KV,G)
+    lse = lse.reshape(b, s_pad, kv, g)[:, :s]
+    return o, lse
+
+
+def _flash_fwd(q, k, v, scale, causal, window, softcap, q_block, kv_block):
+    o, lse = _flash_fwd_impl(q, k, v, scale, causal, window, softcap, q_block, kv_block)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(scale, causal, window, softcap, q_block, kv_block, res, do):
+    q, k, v, o, lse = res
+    b, s, h, dk = q.shape
+    l, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kv
+
+    s_pad = int(np.ceil(s / q_block)) * q_block
+    l_pad = int(np.ceil(l / kv_block)) * kv_block
+    nq, nk = s_pad // q_block, l_pad // kv_block
+
+    qp = _pad_to(q, s_pad, 1).reshape(b, nq, q_block, kv, g, dk)
+    dop = _pad_to(do, s_pad, 1).reshape(b, nq, q_block, kv, g, dv)
+    op = _pad_to(o, s_pad, 1).reshape(b, nq, q_block, kv, g, dv)
+    lsep = _pad_to(lse, s_pad, 1).reshape(b, nq, q_block, kv, g)
+    kp = _pad_to(k, l_pad, 1)
+    vp = _pad_to(v, l_pad, 1)
+
+    # delta = rowsum(do * o): (B, nq, qb, KV, G)
+    delta = jnp.sum(dop.astype(jnp.float32) * op.astype(jnp.float32), axis=-1)
+
+    def q_body(carry, qi):
+        dk_acc, dv_acc = carry
+        qb = qp[:, qi]
+        dob = dop[:, qi].astype(jnp.float32)
+        lseb = lsep[:, qi]                               # (B,qb,KV,G)
+        deltab = delta[:, qi]                            # (B,qb,KV,G)
+        qpos = qi * q_block + jnp.arange(q_block)
+
+        def kv_body(carry_in, ki):
+            dq_blk, dk_acc_in, dv_acc_in = carry_in
+            kb = jax.lax.dynamic_slice_in_dim(kp, ki * kv_block, kv_block, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, ki * kv_block, kv_block, 1)
+            kpos = ki * kv_block + jnp.arange(kv_block)
+            sraw = jnp.einsum(
+                "bqkgd,blkd->bkgql", qb, kb, preferred_element_type=jnp.float32
+            ) * scale
+            if softcap > 0:
+                sc = softcap * jnp.tanh(sraw / softcap)
+                dcap = 1.0 - jnp.square(sc / softcap)    # d sc / d sraw
+            else:
+                sc = sraw
+                dcap = None
+            mask = _block_mask(qpos, kpos, causal, window) & (kpos < l)[None, :]
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            p = jnp.exp(sc - jnp.transpose(lseb, (0, 2, 3, 1))[..., None])  # (B,KV,G,qb,kb)
+            dp = jnp.einsum("bqkgd,blkd->bkgql", dob, vb.astype(jnp.float32))
+            ds = p * (dp - jnp.transpose(deltab, (0, 2, 3, 1))[..., None])
+            if dcap is not None:
+                ds = ds * dcap
+            ds = jnp.where(mask[None, None, None], ds, 0.0) * scale
+            dq_blk = dq_blk + jnp.einsum("bkgql,blkd->bqkgd", ds, kb.astype(jnp.float32))
+            dk_blk = jnp.einsum("bkgql,bqkgd->blkd", ds, qb.astype(jnp.float32))
+            dv_blk = jnp.einsum("bkgql,bqkgd->blkd", p, dob)
+            dk_acc_in = jax.lax.dynamic_update_slice_in_dim(
+                dk_acc_in,
+                jax.lax.dynamic_slice_in_dim(dk_acc_in, ki * kv_block, kv_block, 1) + dk_blk,
+                ki * kv_block,
+                1,
+            )
+            dv_acc_in = jax.lax.dynamic_update_slice_in_dim(
+                dv_acc_in,
+                jax.lax.dynamic_slice_in_dim(dv_acc_in, ki * kv_block, kv_block, 1) + dv_blk,
+                ki * kv_block,
+                1,
+            )
+            return (dq_blk, dk_acc_in, dv_acc_in), None
+
+        dq0 = jnp.zeros((b, q_block, kv, g, dk), dtype=jnp.float32)
+        (dq_blk, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_body, (dq0, dk_acc, dv_acc), jnp.arange(nk), unroll=scan_unroll_arg()
+        )
+        return (dk_acc, dv_acc), dq_blk
+
+    dk0 = jnp.zeros((b, l_pad, kv, dk), dtype=jnp.float32)
+    dv0 = jnp.zeros((b, l_pad, kv, dv), dtype=jnp.float32)
+    (dk_out, dv_out), dq_blocks = jax.lax.scan(q_body, (dk0, dv0), jnp.arange(nq), unroll=scan_unroll_arg())
+
+    dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(b, s_pad, kv, g, dk)[:, :s]
+    dq = dq.reshape(b, s, h, dk).astype(q.dtype)
+    return (
+        dq,
+        dk_out[:, :l].astype(k.dtype),
+        dv_out[:, :l].astype(v.dtype),
+    )
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# Threshold above which prefill/train paths switch from naive to flash.
+FLASH_SEQ_THRESHOLD = 1024
+
+
+def attention_prefill_auto(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Dispatch: flash for long sequences, naive for short (test) shapes."""
+    s, l = q.shape[1], k.shape[1]
+    if max(s, l) >= FLASH_SEQ_THRESHOLD:
+        qb = min(512, s)
+        kb = min(512, l)
+        return flash_attention(q, k, v, scale, causal, window, softcap, qb, kb)
+    # naive reference path
+    b, s_, h, dk = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s_, kv, g, dk)
+    sc = jnp.einsum("bskgd,blkd->bkgsl", qg, k, preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        sc = softcap * jnp.tanh(sc / softcap)
+    qpos = jnp.arange(s_)
+    kpos = jnp.arange(l)
+    mask = _block_mask(qpos, kpos, causal, window)
+    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    ctx = jnp.einsum("bkgsl,blkd->bskgd", p.astype(v.dtype), v)
+    return ctx.reshape(b, s_, h, v.shape[-1])

@@ -1,0 +1,401 @@
+"""Decoder assembly: stages of scanned units.
+
+Public API (all pure functions):
+
+    init_params(cfg, key)                  -> param pytree (concrete)
+    abstract_params(cfg)                   -> ShapeDtypeStruct pytree
+    init_cache(cfg, batch, max_len)        -> cache pytree (concrete zeros)
+    abstract_cache(cfg, batch, max_len)    -> ShapeDtypeStruct pytree
+    forward(params, cfg, tokens/embeds, enc_states=None)       # train: (B,S,d) final hidden
+    prefill(params, cfg, tokens, cache, enc_states=None)       # -> (last_logits, cache, lengths)
+    decode_step(params, cfg, token, cache, lengths, enc_states_cacheed)  # -> (logits, cache)
+
+Depth is organised as ``cfg.stages``: each stage scans ``n_units`` copies of
+a short block tuple, with per-unit params (and caches) stacked on a leading
+axis. ``shared_attn`` blocks read params from the single, non-stacked
+``params["shared_block"]`` (zamba2 semantics) while keeping per-position KV
+caches in the scanned stack.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import gdn as gdn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig, StageSpec
+from repro.models.sharding_hints import constrain_batch
+from repro.models.unroll import unroll_enabled
+from repro.models.layers import (
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+    unembed,
+)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ------------------------------------------------------------------- params
+def _init_block(kind: str, cfg: ModelConfig, key, dtype) -> Dict:
+    d = cfg.d_model
+    keys = jax.random.split(key, 4)
+    if kind in ("attn", "attn_global"):
+        return {
+            "norm1": init_rmsnorm(d, dtype),
+            "attn": attn.init_attention(keys[0], cfg, dtype),
+            "norm2": init_rmsnorm(d, dtype),
+            "mlp": init_mlp(keys[1], d, cfg.d_ff, cfg.mlp_type, dtype),
+        }
+    if kind == "cross_attn":
+        return {
+            "norm1": init_rmsnorm(d, dtype),
+            "xattn": attn.init_cross_attention(keys[0], cfg, dtype),
+            "norm2": init_rmsnorm(d, dtype),
+            "mlp": init_mlp(keys[1], d, cfg.d_ff, cfg.mlp_type, dtype),
+        }
+    if kind == "mla":
+        return {
+            "norm1": init_rmsnorm(d, dtype),
+            "mla": mla_mod.init_mla(keys[0], cfg, dtype),
+            "norm2": init_rmsnorm(d, dtype),
+            "mlp": init_mlp(keys[1], d, cfg.d_ff, cfg.mlp_type, dtype),
+        }
+    if kind == "mla_moe":
+        return {
+            "norm1": init_rmsnorm(d, dtype),
+            "mla": mla_mod.init_mla(keys[0], cfg, dtype),
+            "norm2": init_rmsnorm(d, dtype),
+            "moe": moe_mod.init_moe(keys[1], cfg, dtype),
+        }
+    if kind == "ssm":
+        return {
+            "norm1": init_rmsnorm(d, dtype),
+            "ssm": ssm_mod.init_ssm(keys[0], cfg, dtype),
+        }
+    if kind == "gdn":
+        return {
+            "norm1": init_rmsnorm(d, dtype),
+            "gdn": gdn_mod.init_gdn(keys[0], cfg, dtype),
+            "norm2": init_rmsnorm(d, dtype),
+            "mlp": init_mlp(keys[1], d, cfg.d_ff, cfg.mlp_type, dtype),
+        }
+    if kind == "shared_attn":
+        return {}  # params live in params["shared_block"]
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dtype = _dtype(cfg)
+    n_stage_keys = len(cfg.stages)
+    keys = jax.random.split(key, n_stage_keys + 3)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    kinds = set(cfg.block_kinds_flat())
+    if "shared_attn" in kinds:
+        params["shared_block"] = {
+            "norm1": init_rmsnorm(cfg.d_model, dtype),
+            "attn": attn.init_attention(keys[1], cfg, dtype),
+            "norm2": init_rmsnorm(cfg.d_model, dtype),
+            "mlp": init_mlp(keys[2], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype),
+        }
+    stages = []
+    for si, stage in enumerate(cfg.stages):
+        def init_unit(unit_key, _stage=stage):
+            uks = jax.random.split(unit_key, len(_stage.unit))
+            return {
+                f"b{i}": _init_block(kind, cfg, uks[i], dtype)
+                for i, kind in enumerate(_stage.unit)
+            }
+        unit_keys = jax.random.split(jax.random.fold_in(keys[-1], si), stage.n_units)
+        stages.append(jax.vmap(init_unit)(unit_keys))
+    params["stages"] = stages
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: init_params(cfg, key))
+
+
+# -------------------------------------------------------------------- cache
+def _block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int):
+    cd = _cdtype(cfg)
+    if kind in ("attn", "attn_global", "shared_attn"):
+        shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, cd), "v": jnp.zeros(shape, cd)}
+    if kind == "cross_attn":
+        shape = (batch, cfg.n_media_tokens, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, cd), "v": jnp.zeros(shape, cd)}
+    if kind in ("mla", "mla_moe"):
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), cd),
+            "kr": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), cd),
+        }
+    if kind == "ssm":
+        d_inner, heads, p, n, g, conv_dim = ssm_mod._dims(cfg)
+        return {
+            "ssm": jnp.zeros((batch, heads, p, n), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv_kernel - 1, conv_dim), cd),
+        }
+    if kind == "gdn":
+        return {
+            "gdn": jnp.zeros((batch, cfg.gdn_heads, cfg.gdn_head_dim, cfg.gdn_head_dim), jnp.float32)
+        }
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    stages = []
+    for stage in cfg.stages:
+        unit = {
+            f"b{i}": _block_cache(kind, cfg, batch, max_len)
+            for i, kind in enumerate(stage.unit)
+        }
+        stages.append(
+            jax.tree.map(lambda a, n=stage.n_units: jnp.zeros((n,) + a.shape, a.dtype), unit)
+        )
+    return {"stages": stages}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+# ------------------------------------------------------------------ forward
+def _block_apply(
+    kind: str,
+    bp: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mode: str,                      # train | prefill | decode
+    cache: Optional[Dict],
+    lengths: Optional[jax.Array],
+    shared_params: Optional[Dict],
+    enc_states: Optional[jax.Array],
+) -> Tuple[jax.Array, Optional[Dict]]:
+    if kind == "shared_attn":
+        bp = shared_params
+        kind_eff = "attn_global"
+    else:
+        kind_eff = kind
+
+    if kind_eff in ("attn", "attn_global"):
+        is_global = kind_eff == "attn_global"
+        h = rmsnorm(bp["norm1"], x, cfg.rms_eps)
+        if mode == "decode":
+            a_out, new_cache = attn.self_attention_decode(
+                bp["attn"], h, cache, lengths, cfg, is_global=is_global
+            )
+        else:
+            a_out, new_cache = attn.self_attention_prefill(
+                bp["attn"], h, cfg, is_global=is_global,
+                cache=cache if mode == "prefill" else None,
+            )
+        x = x + a_out
+        h = rmsnorm(bp["norm2"], x, cfg.rms_eps)
+        x = x + mlp(bp["mlp"], h, cfg.mlp_type)
+        return x, new_cache
+
+    if kind_eff == "cross_attn":
+        h = rmsnorm(bp["norm1"], x, cfg.rms_eps)
+        if mode == "train":
+            enc_cache = attn.cross_attention_encode(bp["xattn"], enc_states)
+            new_cache = None
+        elif mode == "prefill":
+            enc_cache = attn.cross_attention_encode(bp["xattn"], enc_states)
+            new_cache = {
+                "k": enc_cache["k"].astype(cache["k"].dtype),
+                "v": enc_cache["v"].astype(cache["v"].dtype),
+            }
+        else:  # decode: reuse cached encoder K/V
+            enc_cache = cache
+            new_cache = cache
+        a_out = attn.cross_attention_apply(bp["xattn"], h, enc_cache, cfg)
+        x = x + a_out
+        h = rmsnorm(bp["norm2"], x, cfg.rms_eps)
+        x = x + mlp(bp["mlp"], h, cfg.mlp_type)
+        return x, new_cache
+
+    if kind_eff in ("mla", "mla_moe"):
+        h = rmsnorm(bp["norm1"], x, cfg.rms_eps)
+        if mode == "decode":
+            a_out, new_cache = mla_mod.mla_decode(
+                bp["mla"], h, cache, lengths, cfg, absorb=True
+            )
+        else:
+            a_out, new_cache = mla_mod.mla_prefill(
+                bp["mla"], h, cfg,
+                cache=cache if mode == "prefill" else None,
+                absorb=True,
+            )
+        x = x + a_out
+        h = rmsnorm(bp["norm2"], x, cfg.rms_eps)
+        if kind_eff == "mla_moe":
+            m_out, _aux = moe_mod.moe_mlp(bp["moe"], h, cfg)
+        else:
+            m_out = mlp(bp["mlp"], h, cfg.mlp_type)
+        x = x + m_out
+        return x, new_cache
+
+    if kind_eff == "ssm":
+        h = rmsnorm(bp["norm1"], x, cfg.rms_eps)
+        if mode == "decode":
+            s_out, new_cache = ssm_mod.ssm_decode(bp["ssm"], h, cache, cfg)
+        else:
+            s_out, new_cache = ssm_mod.ssm_prefill(
+                bp["ssm"], h, cfg, cache=cache if mode == "prefill" else None
+            )
+        return x + s_out, new_cache
+
+    if kind_eff == "gdn":
+        h = rmsnorm(bp["norm1"], x, cfg.rms_eps)
+        if mode == "decode":
+            g_out, new_cache = gdn_mod.gdn_decode(bp["gdn"], h, cache, cfg)
+        else:
+            g_out, new_cache = gdn_mod.gdn_prefill(
+                bp["gdn"], h, cfg, cache=cache if mode == "prefill" else None
+            )
+        x = x + g_out
+        h = rmsnorm(bp["norm2"], x, cfg.rms_eps)
+        x = x + mlp(bp["mlp"], h, cfg.mlp_type)
+        return x, new_cache
+
+    raise ValueError(kind)
+
+
+def _run_stages(
+    params: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    mode: str,
+    cache: Optional[Dict],
+    lengths: Optional[jax.Array],
+    enc_states: Optional[jax.Array],
+    remat: bool,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    shared = params.get("shared_block")
+    new_stage_caches = []
+    for si, stage in enumerate(cfg.stages):
+        sp = params["stages"][si]
+        sc = cache["stages"][si] if cache is not None else None
+
+        def unit_fn(carry_x, xs, _stage=stage):
+            up, uc = xs
+            new_uc = {}
+            for i, kind in enumerate(_stage.unit):
+                bc = uc[f"b{i}"] if uc is not None else None
+                carry_x, nbc = _block_apply(
+                    kind, up[f"b{i}"], carry_x, cfg, mode, bc, lengths, shared, enc_states
+                )
+                new_uc[f"b{i}"] = nbc if nbc is not None else {}
+            # keep activations batch-sharded across unit boundaries (no-op
+            # unless the launch layer configured batch axes)
+            carry_x = constrain_batch(carry_x)
+            return carry_x, new_uc
+
+        body = jax.checkpoint(unit_fn) if (remat and mode == "train") else unit_fn
+        if unroll_enabled():
+            # accounting mode: python-loop over units for exact HLO costs
+            new_units = []
+            for u in range(stage.n_units):
+                up_u = jax.tree.map(lambda a, _u=u: a[_u], sp)
+                uc_u = jax.tree.map(lambda a, _u=u: a[_u], sc) if sc is not None else None
+                x, nuc = body(x, (up_u, uc_u))
+                new_units.append(nuc)
+            if sc is not None:
+                new_sc = jax.tree.map(lambda *ls: jnp.stack(ls), *new_units)
+                new_stage_caches.append(new_sc)
+        elif sc is not None:
+            x, new_sc = jax.lax.scan(body, x, (sp, sc))
+            new_stage_caches.append(new_sc)
+        else:
+            x, _ = jax.lax.scan(lambda c, p, _b=body: (_b(c, (p, None))[0], None), x, sp)
+    new_cache = {"stages": new_stage_caches} if cache is not None else None
+    return x, new_cache
+
+
+def _embed_inputs(params, cfg: ModelConfig, inputs):
+    cd = _cdtype(cfg)
+    if cfg.input_is_embeddings:
+        return inputs.astype(cd)
+    return embed(params["embed"], inputs, cfg.embed_scale, cfg.d_model, cd)
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    inputs: jax.Array,
+    *,
+    enc_states: Optional[jax.Array] = None,
+    remat: bool = True,
+) -> jax.Array:
+    """Training/eval forward -> final hidden states (B, S, d).
+
+    Logits are intentionally not materialised here: the training loss uses a
+    chunked softmax-xent over the (possibly 256 k) vocabulary; sampling-side
+    callers use ``logits()``.
+    """
+    x = _embed_inputs(params, cfg, inputs)
+    x, _ = _run_stages(params, cfg, x, "train", None, None, enc_states, remat)
+    return rmsnorm(params["final_norm"], x, cfg.rms_eps)
+
+
+def logits(params: Dict, cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    return unembed(params["embed"], hidden, cfg.final_softcap)
+
+
+def prefill(
+    params: Dict,
+    cfg: ModelConfig,
+    inputs: jax.Array,
+    cache: Dict,
+    *,
+    prompt_lengths: Optional[jax.Array] = None,
+    enc_states: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict, jax.Array]:
+    """Process the prompt, fill caches, return last-valid-token logits."""
+    b, s = inputs.shape[0], inputs.shape[1]
+    if prompt_lengths is None:
+        prompt_lengths = jnp.full((b,), s, dtype=jnp.int32)
+    x = _embed_inputs(params, cfg, inputs)
+    x, new_cache = _run_stages(params, cfg, x, "prefill", cache, None, enc_states, False)
+    x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    last = jnp.take_along_axis(x, (prompt_lengths - 1)[:, None, None], axis=1)[:, 0]
+    return logits(params, cfg, last[:, None])[:, 0], new_cache, prompt_lengths
+
+
+def decode_step(
+    params: Dict,
+    cfg: ModelConfig,
+    token: jax.Array,                 # (B,) int32 or (B, 1, d) embeddings
+    cache: Dict,
+    lengths: jax.Array,               # (B,) tokens already cached
+    *,
+    enc_states: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict, jax.Array]:
+    """One decode step: append token, return (logits (B,V), cache, lengths+1)."""
+    if cfg.input_is_embeddings:
+        x = token.astype(_cdtype(cfg))
+    else:
+        x = _embed_inputs(params, cfg, token[:, None])
+    x, new_cache = _run_stages(params, cfg, x, "decode", cache, lengths, enc_states, False)
+    x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    return logits(params, cfg, x)[:, 0], new_cache, lengths + 1

@@ -1,0 +1,33 @@
+"""Activation-sharding hints for the model assembly.
+
+When the launch layer sets the batch axes (``set_activation_batch_axes``),
+the assembly pins every unit's output to batch-sharded layout via
+``with_sharding_constraint`` — preventing the SPMD partitioner from
+"resolving" a weights-vs-activations axis conflict by replicating the
+batch (the §Perf iteration-2 pathology: f32[global_batch, S, d] temporaries
+on every device). Requires an active mesh context (jax.set_mesh / explicit
+NamedSharding axes resolve against it). No-op by default so tests and
+single-device paths are unaffected.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: Optional[Tuple[str, ...]] = None
+
+
+def set_activation_batch_axes(axes: Optional[Tuple[str, ...]]) -> None:
+    global _BATCH_AXES
+    _BATCH_AXES = tuple(axes) if axes else None
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim-0 of an activation to the configured batch axes."""
+    if _BATCH_AXES is None:
+        return x
+    axes = _BATCH_AXES if len(_BATCH_AXES) > 1 else _BATCH_AXES[0]
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)

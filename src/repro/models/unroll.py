@@ -1,0 +1,24 @@
+"""Global unroll switch for cost-accounting lowers.
+
+XLA's cost analysis counts ``while``-loop bodies ONCE, not x trip-count
+(verified by probe — see EXPERIMENTS.md §Dry-run), so scanned-layer models
+under-report FLOPs/bytes by ~n_layers. For the §Roofline accounting pass,
+``set_unroll(True)`` makes the model assembly Python-loop over units and the
+flash/CE scans fully unroll, yielding exact HLO-level counts. The default
+(scanned) mode remains the production lowering — compact HLO, fast compile.
+"""
+_UNROLL = False
+
+
+def set_unroll(value: bool) -> None:
+    global _UNROLL
+    _UNROLL = bool(value)
+
+
+def unroll_enabled() -> bool:
+    return _UNROLL
+
+
+def scan_unroll_arg() -> bool | int:
+    """Value for lax.scan(unroll=...) in inner loops."""
+    return True if _UNROLL else 1

@@ -1,0 +1,4 @@
+"""Serving substrate: continuous-batching engine with phase accounting."""
+from repro.serving.engine import EOS, PhaseStats, Request, ServingEngine
+
+__all__ = ["EOS", "PhaseStats", "Request", "ServingEngine"]

@@ -1,0 +1,61 @@
+"""Chunked softmax cross-entropy over huge vocabularies.
+
+256 k-vocab configs (gemma, nemotron) cannot materialise (B, S, V) logits at
+train_4k (1 M tokens x 256 k x 4 B = 1 PB global). The loss therefore scans
+the sequence in chunks, computing logits -> logsumexp -> label gather per
+chunk, with ``jax.checkpoint`` so the backward pass recomputes chunk logits
+instead of storing them. Live logits are bounded to (B, chunk, V/model_shards)
+per device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap_logits
+from repro.models.unroll import scan_unroll_arg
+
+
+def chunked_softmax_xent(
+    hidden: jax.Array,        # (B, S, d)
+    table: jax.Array,         # (V, d) embedding/unembedding matrix
+    labels: jax.Array,        # (B, S) int32
+    *,
+    mask: jax.Array | None = None,   # (B, S) bool/float; 0 = ignore
+    chunk: int = 512,
+    final_softcap: float = 0.0,
+) -> jax.Array:
+    b, s, d = hidden.shape
+    if mask is None:
+        mask = jnp.ones((b, s), dtype=jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (s + pad) // chunk
+
+    hc = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(h, l, m):
+        logits = (h @ table.T.astype(h.dtype)).astype(jnp.float32)  # (B,c,V)
+        if final_softcap > 0:
+            logits = softcap_logits(logits, final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * m)
+
+    def body(carry, xs):
+        h, l, m = xs
+        return carry + chunk_loss(h, l, m), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc, mc), unroll=scan_unroll_arg())
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return total / denom

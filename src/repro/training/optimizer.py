@@ -1,0 +1,96 @@
+"""AdamW with a WSD (warmup–stable–decay) schedule.
+
+Self-contained optax-like implementation (the environment is offline).
+Moments are fp32 regardless of param dtype; weight decay is decoupled and
+skipped for 1-D params (norms, biases, scalars). The WSD schedule is the
+MiniCPM recipe the assignment calls out: linear warmup, long stable plateau,
+short exponential-ish (here: linear) decay tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, grads, state: AdamWState, params, lr) -> tuple[Any, AdamWState]:
+        count = state.count + 1
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = self.b1 * m + (1.0 - self.b1) * g32
+            v = self.b2 * v + (1.0 - self.b2) * jnp.square(g32)
+            mh = m / b1c
+            vh = v / b2c
+            step = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:  # decoupled decay on matrices only
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            return new_p, m, v
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(mu=new_m, nu=new_v, count=count)
+
+
+def wsd_schedule(
+    peak_lr: float,
+    warmup_steps: int,
+    stable_steps: int,
+    decay_steps: int,
+    min_lr_frac: float = 0.1,
+) -> Callable[[jax.Array], jax.Array]:
+    """Warmup-Stable-Decay (MiniCPM): the schedule the assignment flags."""
+
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / max(warmup_steps, 1))
+        decay_t = jnp.clip(
+            (step - warmup_steps - stable_steps) / max(decay_steps, 1), 0.0, 1.0
+        )
+        decay = peak_lr * (1.0 - (1.0 - min_lr_frac) * decay_t)
+        return jnp.where(step < warmup_steps + stable_steps, warm, decay)
+
+    return schedule
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree), norm

@@ -1,0 +1,116 @@
+"""Train-step factory: microbatched grad accumulation, chunked CE loss,
+optional int8 gradient compression with error feedback, AdamW + WSD.
+
+``make_train_step(cfg, ...)`` returns a pure ``train_step(state, batch)``
+suitable for ``jax.jit`` with in/out shardings (see repro.launch.sharding).
+Batch contract:
+
+    {"inputs": (B, S) int32 tokens  OR (B, S, d) embeddings (audio/vlm stubs),
+     "labels": (B, S) int32,
+     "enc_states": (B, n_media, d)  (vlm only)}
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.models.config import ModelConfig
+from repro.training.compression import compress_with_feedback, init_error_buffer
+from repro.training.losses import chunked_softmax_xent
+from repro.training.optimizer import AdamW, AdamWState, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: AdamWState
+    step: jax.Array
+    error_buf: Any = None          # int8-compression error feedback (optional)
+
+
+def init_train_state(cfg: ModelConfig, params, optimizer: AdamW, *, compression: bool = False):
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        step=jnp.zeros((), jnp.int32),
+        error_buf=init_error_buffer(params) if compression else None,
+    )
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: AdamW,
+    schedule,
+    *,
+    microbatches: int = 1,
+    remat: bool = True,
+    loss_chunk: int = 512,
+    max_grad_norm: float = 1.0,
+    compression: bool = False,
+):
+    def loss_fn(params, mb: Dict[str, jax.Array]):
+        h = forward(params, cfg, mb["inputs"], enc_states=mb.get("enc_states"), remat=remat)
+        return chunked_softmax_xent(
+            h,
+            params["embed"]["table"],
+            mb["labels"],
+            chunk=loss_chunk,
+            final_softcap=cfg.final_softcap,
+        )
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            return grad_fn(params, batch)
+        # reshape (B, ...) -> (M, B/M, ...) and accumulate over the M axis.
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+        mbs = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            loss_acc, grads_acc = carry
+            loss, grads = grad_fn(params, mb)
+            grads_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+            return (loss_acc + loss, grads_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads_sum), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), mbs)
+        inv = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * inv, grads_sum)
+        return loss_sum * inv, grads
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        loss, grads = compute_grads(state.params, batch)
+        error_buf = state.error_buf
+        if compression:
+            grads, error_buf = compress_with_feedback(grads, error_buf)
+        grads, grad_norm = clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(state.step)
+        new_params, new_opt = optimizer.update(grads, state.opt_state, state.params, lr)
+        metrics = {
+            "loss": loss,
+            "grad_norm": grad_norm,
+            "lr": lr,
+            "step": state.step.astype(jnp.float32),
+        }
+        return (
+            TrainState(new_params, new_opt, state.step + 1, error_buf),
+            metrics,
+        )
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, *, loss_chunk: int = 512):
+    def eval_step(params, batch):
+        h = forward(params, cfg, batch["inputs"], enc_states=batch.get("enc_states"), remat=False)
+        return chunked_softmax_xent(
+            h, params["embed"]["table"], batch["labels"],
+            chunk=loss_chunk, final_softcap=cfg.final_softcap,
+        )
+    return eval_step

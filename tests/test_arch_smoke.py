@@ -1,0 +1,89 @@
+"""Per-assigned-architecture smoke tests (deliverable f): REDUCED config of
+the same family runs one forward + one train step + one decode step on CPU,
+asserting output shapes and no NaNs. Full configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced_config, get_shape, shape_applicable
+from repro.models import decode_step, forward, init_cache, init_params, logits, prefill
+from repro.training import AdamW, DataConfig, PackedLMStream, init_train_state, make_train_step, wsd_schedule
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_and_train(arch):
+    cfg = reduced_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+
+    data = PackedLMStream(cfg, DataConfig(seq_len=S, batch_size=B))
+    batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+
+    # forward: shapes + finite
+    h = forward(params, cfg, batch["inputs"], enc_states=batch.get("enc_states"), remat=False)
+    lg = logits(params, cfg, h)
+    assert lg.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg)).all(), f"{arch}: NaN/inf in logits"
+
+    # one train step
+    opt = AdamW()
+    step = jax.jit(make_train_step(cfg, opt, wsd_schedule(1e-3, 1, 5, 2)))
+    state = init_train_state(cfg, params, opt)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), f"{arch}: non-finite loss"
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = reduced_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 12
+    if cfg.input_is_embeddings:
+        inputs = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+        next_in = jax.random.normal(jax.random.PRNGKey(2), (B, 1, cfg.d_model))
+    else:
+        inputs = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+        next_in = jax.random.randint(jax.random.PRNGKey(2), (B,), 0, cfg.vocab_size)
+    enc = (
+        jax.random.normal(jax.random.PRNGKey(3), (B, cfg.n_media_tokens, cfg.d_model))
+        if cfg.n_media_tokens else None
+    )
+    cache = init_cache(cfg, B, S + 8)
+    lg, cache, lengths = prefill(params, cfg, inputs, cache, enc_states=enc)
+    assert lg.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg)).all()
+    lg2, cache, lengths = decode_step(params, cfg, next_in, cache, lengths, enc_states=enc)
+    assert lg2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg2)).all()
+    assert int(lengths[0]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_full_config_structure(arch):
+    """Exact assigned dims are present on the FULL config (no allocation)."""
+    cfg = get_config(arch)
+    expected = {
+        "mamba2-780m": dict(d_model=1536, vocab_size=50280, ssm_state=128, n_blocks=48),
+        "llama-3.2-vision-11b": dict(d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336, vocab_size=128256, n_blocks=40),
+        "gemma-2b": dict(d_model=2048, n_heads=8, n_kv_heads=1, d_ff=16384, vocab_size=256000, head_dim=256, n_blocks=18),
+        "gemma2-9b": dict(d_model=3584, n_heads=16, n_kv_heads=8, d_ff=14336, vocab_size=256000, n_blocks=42),
+        "nemotron-4-15b": dict(d_model=6144, n_heads=48, n_kv_heads=8, d_ff=24576, vocab_size=256000, mlp_type="squared_relu", n_blocks=32),
+        "minicpm-2b": dict(d_model=2304, n_heads=36, n_kv_heads=36, d_ff=5760, vocab_size=122753, n_blocks=40),
+        "musicgen-large": dict(d_model=2048, n_heads=32, d_ff=8192, vocab_size=2048, n_blocks=48),
+        "deepseek-v2-lite-16b": dict(d_model=2048, n_heads=16, vocab_size=102400, kv_lora_rank=512, moe_d_ff=1408, n_routed_experts=64, moe_top_k=6, n_blocks=27),
+        "deepseek-v2-236b": dict(d_model=5120, n_heads=128, vocab_size=102400, kv_lora_rank=512, moe_d_ff=1536, n_routed_experts=160, moe_top_k=6, n_blocks=60),
+        "zamba2-1.2b": dict(d_model=2048, n_heads=32, d_ff=8192, vocab_size=32000, ssm_state=64, n_blocks=38),
+    }[arch]
+    for k, v in expected.items():
+        got = getattr(cfg, k) if k != "n_blocks" else cfg.n_blocks
+        assert got == v, f"{arch}.{k}: {got} != {v}"
+
+
+def test_long_500k_applicability():
+    """Sub-quadratic archs run long_500k; pure full-attention archs skip."""
+    long = get_shape("long_500k")
+    runs = {a for a in ASSIGNED_ARCHS if shape_applicable(get_config(a), long)[0]}
+    assert runs == {"mamba2-780m", "zamba2-1.2b"}

@@ -1,0 +1,168 @@
+"""Energy model + DVFS lever unit & property tests (hypothesis)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dvfs import ClockLock, Default, PowerCap, resolve
+from repro.core.energy import EnergyModel
+from repro.core.workload import Workload, decode_workload, prefill_workload
+from repro.hw import H200_SXM, TPU_V5E, roofline_terms, ridge_point
+from repro.configs.paper_models import PAPER_MODELS
+
+H200 = EnergyModel(H200_SXM)
+V5E = EnergyModel(TPU_V5E)
+
+workloads = st.builds(
+    Workload,
+    flops_mxu=st.floats(1e6, 1e15),
+    flops_vpu=st.floats(0, 1e12),
+    hbm_bytes=st.floats(1e6, 1e13),
+    ici_bytes=st.floats(0, 1e12),
+    n_kernels=st.floats(0, 1e5),
+    gemm_m=st.integers(1, 4096),
+    tokens=st.integers(1, 4096),
+    sm_activity=st.floats(0.1, 1.0),
+    copy_frac=st.floats(0.0, 1.0),
+)
+
+
+class TestEnergyModelProperties:
+    @given(w=workloads)
+    @settings(max_examples=200, deadline=None)
+    def test_monotone_time_in_clock(self, w):
+        """Lower clock never makes a step faster."""
+        f = sorted(H200_SXM.clock_levels)
+        times = [H200.profile(w, c).t_total for c in f]
+        assert all(t1 >= t2 - 1e-12 for t1, t2 in zip(times, times[1:]))
+
+    @given(w=workloads)
+    @settings(max_examples=200, deadline=None)
+    def test_power_monotone_in_clock(self, w):
+        f = sorted(H200_SXM.clock_levels)
+        # power at fixed workload rises with clock: g(f) monotone, u's vary
+        # only through T which shrinks -> utilisations rise; both push P up.
+        powers = [H200.profile(w, c).power_w for c in f]
+        assert all(p1 <= p2 + 1e-9 for p1, p2 in zip(powers, powers[1:]))
+
+    @given(w=workloads)
+    @settings(max_examples=200, deadline=None)
+    def test_power_bounded_by_budget(self, w):
+        for c in H200_SXM.clock_levels:
+            p = H200.profile(w, c).power_w
+            pmax = (
+                H200_SXM.p_idle + H200_SXM.p_issue_max + H200_SXM.p_mxu_max
+                + H200_SXM.p_mem_dyn + H200_SXM.p_ici_dyn
+            )
+            assert H200_SXM.p_idle <= p <= pmax + 1e-6
+
+    @given(w=workloads)
+    @settings(max_examples=150, deadline=None)
+    def test_energy_identity(self, w):
+        prof = H200.profile(w, 1185.0)
+        np.testing.assert_allclose(prof.energy_j, prof.power_w * prof.t_total, rtol=1e-9)
+        np.testing.assert_allclose(
+            prof.tokens_per_joule * prof.energy_per_token_mj, 1e3, rtol=1e-6
+        )
+
+    @given(w=workloads)
+    @settings(max_examples=150, deadline=None)
+    def test_cap_is_a_true_ceiling(self, w):
+        """Under any cap, delivered power never exceeds it — unless even the
+        lowest clock can't satisfy it (driver floors out)."""
+        for cap_w in H200_SXM.power_cap_levels:
+            op = resolve(H200, w, PowerCap(cap_w))
+            floor = min(H200_SXM.clock_levels)
+            if op.actual_clock_mhz > floor:
+                assert op.power_w <= cap_w + 1e-6
+
+    @given(w=workloads)
+    @settings(max_examples=150, deadline=None)
+    def test_inert_cap_identical_to_default(self, w):
+        """The paper's central mechanism: a cap that never engages produces
+        a byte-identical operating point to no cap at all."""
+        base = resolve(H200, w, Default())
+        for cap_w in H200_SXM.power_cap_levels:
+            op = resolve(H200, w, PowerCap(cap_w))
+            if not op.engaged:
+                assert op.actual_clock_mhz == base.actual_clock_mhz
+                np.testing.assert_allclose(op.power_w, base.power_w, rtol=1e-12)
+
+
+class TestFirmwareClamp:
+    def test_lock_clamps_at_or_above_1830(self):
+        assert H200_SXM.effective_lock(1980.0) == 1830.0
+        assert H200_SXM.effective_lock(1830.0) == 1830.0
+        assert H200_SXM.effective_lock(1900.0) == 1830.0
+
+    def test_lock_honoured_below_clamp(self):
+        for f in (390.0, 780.0, 1185.0, 1590.0):
+            assert H200_SXM.effective_lock(f) == f
+
+    def test_tpu_has_no_clamp(self):
+        assert TPU_V5E.effective_lock(TPU_V5E.f_max) == TPU_V5E.f_max
+
+    def test_double_disguise(self):
+        """Requested 1980 delivers 1830; configured 280W cap delivers ~no
+        change — neither configured value reflects actual behaviour."""
+        cfg = PAPER_MODELS["qwen3-4b"]()
+        w = decode_workload(cfg, 1, 1024)
+        lock = resolve(H200, w, ClockLock(1980.0))
+        assert lock.configured == 1980.0 and lock.actual_clock_mhz == 1830.0
+        cap = resolve(H200, w, PowerCap(280.0))
+        assert cap.configured == 280.0 and not cap.engaged
+
+
+class TestRoofline:
+    def test_ridge_values(self):
+        assert 200 < ridge_point(H200_SXM) < 212          # ~206 FLOPs/B
+        assert 235 < ridge_point(TPU_V5E) < 245           # ~240 FLOPs/B
+
+    def test_terms_and_dominance(self):
+        t = roofline_terms(TPU_V5E, flops=1e12, hbm_bytes=1e10, collective_bytes=1e9, chips=1)
+        np.testing.assert_allclose(t.t_compute, 1e12 / 197e12)
+        np.testing.assert_allclose(t.t_memory, 1e10 / 819e9)
+        np.testing.assert_allclose(t.t_collective, 1e9 / 50e9)
+        assert t.dominant == "collective"
+        assert t.t_bound == max(t.t_compute, t.t_memory, t.t_collective)
+
+    def test_chips_scale(self):
+        t1 = roofline_terms(TPU_V5E, flops=1e12, hbm_bytes=1e10, chips=1)
+        t256 = roofline_terms(TPU_V5E, flops=1e12, hbm_bytes=1e10, chips=256)
+        np.testing.assert_allclose(t1.t_compute / 256, t256.t_compute)
+
+
+class TestWorkloads:
+    @pytest.mark.parametrize("name", sorted(PAPER_MODELS))
+    def test_decode_batch_scaling(self, name):
+        """Batching amortises weights: energy/token strictly improves."""
+        cfg = PAPER_MODELS[name]()
+        e1 = resolve(H200, decode_workload(cfg, 1, 1024), Default()).energy_per_token_mj
+        e32 = resolve(H200, decode_workload(cfg, 32, 1024), Default()).energy_per_token_mj
+        assert e32 < e1 / 3, f"{name}: batching should cut E/tok >3x ({e1:.1f}->{e32:.1f})"
+
+    def test_context_growth_ordering(self):
+        """GQA grows fastest with context, MLA slower, Mamba2 flat (Fig 2)."""
+        def growth(name):
+            cfg = PAPER_MODELS[name]()
+            e4 = resolve(H200, decode_workload(cfg, 8, 4096), Default()).energy_per_token_mj
+            e16 = resolve(H200, decode_workload(cfg, 8, 16384), Default()).energy_per_token_mj
+            return e16 / e4
+        g_gqa = growth("qwen3-4b")
+        g_mla = growth("minitron-4b-mla")
+        g_m2 = growth("mamba2-4b")
+        assert g_gqa > g_mla > g_m2 - 1e-9
+        assert g_m2 < 1.05
+
+    def test_fused_strictly_helps_recurrent_prefill(self):
+        cfg = PAPER_MODELS["mamba2-4b"]()
+        eager = resolve(H200, prefill_workload(cfg, 1, 4096), Default())
+        fused = resolve(H200, prefill_workload(cfg, 1, 4096, fused=True), Default())
+        assert fused.energy_per_token_mj < eager.energy_per_token_mj / 2
+
+    def test_mla_fused_removes_zoo(self):
+        cfg = PAPER_MODELS["minitron-4b-mla"]()
+        eager = decode_workload(cfg, 1, 1024)
+        fused = decode_workload(cfg, 1, 1024, fused=True)
+        assert fused.n_kernels < eager.n_kernels / 1.5

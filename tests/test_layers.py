@@ -1,0 +1,154 @@
+"""Unit tests: norms, rope, MLPs, flash attention vs naive."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.flash import attention_prefill_auto, flash_attention
+from repro.models.layers import apply_rope, init_mlp, init_rmsnorm, mlp, rmsnorm, softcap_logits
+
+
+class TestRMSNorm:
+    def test_unit_scale_normalises(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 32)) * 7.0
+        p = init_rmsnorm(32, jnp.float32)
+        y = rmsnorm(p, x)
+        rms = np.sqrt(np.mean(np.square(np.asarray(y)), axis=-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+    def test_scale_parameterisation_is_one_plus(self):
+        x = jnp.ones((1, 8))
+        p = {"scale": jnp.full((8,), -1.0)}  # (1 + -1) = 0
+        y = rmsnorm(p, x)
+        np.testing.assert_allclose(np.asarray(y), 0.0, atol=1e-6)
+
+
+class TestRoPE:
+    def test_norm_preserved(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 4, 64))
+        pos = jnp.arange(16)[None, :]
+        y = apply_rope(x, pos, 10000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1),
+            rtol=1e-4,
+        )
+
+    def test_position_zero_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 2, 32))
+        y = apply_rope(x, jnp.zeros((1, 1), jnp.int32), 10000.0)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+    def test_relative_property(self):
+        # <rope(q,m), rope(k,n)> depends only on m-n
+        q = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, 32))
+        k = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, 32))
+        def dot(m, n):
+            qm = apply_rope(q, jnp.array([[m]]), 10000.0)
+            kn = apply_rope(k, jnp.array([[n]]), 10000.0)
+            return float(jnp.sum(qm * kn))
+        assert abs(dot(5, 3) - dot(12, 10)) < 1e-3
+
+
+class TestMLP:
+    @pytest.mark.parametrize("kind", ["swiglu", "geglu", "squared_relu"])
+    def test_shapes_and_finite(self, kind):
+        p = init_mlp(jax.random.PRNGKey(0), 16, 32, kind, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 16))
+        y = mlp(p, x, kind)
+        assert y.shape == (2, 5, 16)
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_squared_relu_nonneg_activation(self):
+        p = init_mlp(jax.random.PRNGKey(0), 8, 16, "squared_relu", jnp.float32)
+        p["w_down"] = jnp.eye(16, 8)  # expose activations
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 3, 8))
+        up = np.asarray(x @ p["w_up"])
+        act = np.square(np.maximum(up, 0))
+        np.testing.assert_allclose(np.asarray(mlp(p, x, "squared_relu")), act @ np.eye(16, 8), rtol=1e-5)
+
+
+class TestSoftcap:
+    def test_bounded(self):
+        x = jnp.linspace(-1000, 1000, 101)
+        y = softcap_logits(x, 30.0)
+        assert float(jnp.max(jnp.abs(y))) <= 30.0
+
+    def test_disabled(self):
+        x = jnp.linspace(-10, 10, 11)
+        np.testing.assert_array_equal(np.asarray(softcap_logits(x, 0.0)), np.asarray(x))
+
+
+class TestFlashAttention:
+    def _naive(self, q, k, v, scale, causal, window, softcap):
+        import repro.models.flash as fl
+        b, s, h, dk = q.shape
+        kv = k.shape[2]
+        g = h // kv
+        qg = q.reshape(b, s, kv, g, dk)
+        sc = jnp.einsum("bskgd,blkd->bkgsl", qg, k) * scale
+        if softcap > 0:
+            sc = softcap * jnp.tanh(sc / softcap)
+        mask = fl._block_mask(jnp.arange(s), jnp.arange(k.shape[1]), causal, window)
+        sc = jnp.where(mask[None, None, None], sc, fl.NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        return jnp.einsum("bkgsl,blkd->bskgd", p, v).reshape(b, s, h, v.shape[-1])
+
+    @pytest.mark.parametrize("window,softcap,kv", [(0, 0.0, 2), (7, 0.0, 2), (0, 20.0, 1), (5, 30.0, 4)])
+    def test_matches_naive(self, window, softcap, kv):
+        key = jax.random.PRNGKey(0)
+        B, S, H, Dk, Dv = 2, 33, 4, 16, 8
+        q = jax.random.normal(key, (B, S, H, Dk))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, kv, Dk))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, kv, Dv))
+        out = flash_attention(q, k, v, 0.25, True, window, softcap, 8, 16)
+        ref = self._naive(q, k, v, 0.25, True, window, softcap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+    def test_asymmetric_kv_dims_mqa(self):
+        """MLA's absorbed form: KV=1, Dk != Dv."""
+        key = jax.random.PRNGKey(5)
+        B, S, H = 1, 17, 6
+        q = jax.random.normal(key, (B, S, H, 24))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, 1, 24))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, 1, 10))
+        out = flash_attention(q, k, v, 0.2, True, 0, 0.0, 8, 8)
+        ref = self._naive(q, k, v, 0.2, True, 0, 0.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+    def test_gradients_match_naive(self):
+        key = jax.random.PRNGKey(7)
+        B, S, H, D = 1, 12, 2, 8
+        q = jax.random.normal(key, (B, S, H, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, 1, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, 1, D))
+
+        def loss_flash(q, k, v):
+            return jnp.sum(jnp.square(flash_attention(q, k, v, 0.3, True, 0, 0.0, 4, 4)))
+
+        def loss_naive(q, k, v):
+            return jnp.sum(jnp.square(self._naive(q, k, v, 0.3, True, 0, 0.0)))
+
+        gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+        gn = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gf, gn):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-4)
+
+    def test_gradients_with_softcap_and_window(self):
+        key = jax.random.PRNGKey(8)
+        B, S, H, D = 1, 10, 2, 8
+        q = jax.random.normal(key, (B, S, H, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, 2, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, 2, D))
+
+        def loss_flash(q):
+            return jnp.sum(flash_attention(q, k, v, 0.3, True, 4, 15.0, 4, 4) ** 2)
+
+        def loss_naive(q):
+            return jnp.sum(self._naive(q, k, v, 0.3, True, 4, 15.0) ** 2)
+
+        np.testing.assert_allclose(
+            np.asarray(jax.grad(loss_flash)(q)),
+            np.asarray(jax.grad(loss_naive)(q)),
+            rtol=1e-3, atol=1e-3,
+        )

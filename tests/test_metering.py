@@ -1,0 +1,93 @@
+"""Metering methodology tests: trapezoid integration, snapshot fallback,
+counter cross-validation — the paper's §3.1 measurement stack."""
+import numpy as np
+import pytest
+
+from repro.core.metering import (
+    CounterCrossValidator,
+    EnergyMeter,
+    PowerSampler,
+    PowerTrace,
+    integrate_trace,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class TestTrapezoid:
+    def test_constant_power(self):
+        ts = np.linspace(0, 2.0, 41)
+        assert abs(integrate_trace(ts, np.full_like(ts, 150.0)) - 300.0) < 1e-9
+
+    def test_linear_ramp_exact(self):
+        ts = np.linspace(0, 1.0, 21)
+        watts = 100 + 50 * ts     # mean 125 W over 1 s
+        assert abs(integrate_trace(ts, watts) - 125.0) < 1e-9
+
+    def test_sine_error_small_at_50ms(self):
+        """50 ms sampling of a 1 Hz power wobble integrates within 1%."""
+        ts = np.arange(0, 5.0, 0.05)
+        watts = 200 + 30 * np.sin(2 * np.pi * ts)
+        exact = 200 * 5.0 + 30 / (2 * np.pi) * (1 - np.cos(2 * np.pi * 5.0))
+        assert abs(integrate_trace(ts, watts) - exact) / exact < 0.01
+
+
+class TestEnergyMeter:
+    def test_trapezoid_path(self):
+        clk = FakeClock()
+        power = [100.0]
+        meter = EnergyMeter(lambda: power[0], interval_s=1e9, clock=clk)  # manual samples
+        with meter:
+            for _ in range(5):
+                clk.t += 0.1
+                meter.sampler.sample_once()
+        res = meter.result
+        assert res.method == "trapezoid"
+        np.testing.assert_allclose(res.energy_j, 100.0 * res.duration_s, rtol=1e-6)
+
+    def test_snapshot_fallback_short_op(self):
+        """Ops <100 ms use snapshot power x wall-clock (the paper's ~44% of
+        prefill configs)."""
+        clk = FakeClock()
+        meter = EnergyMeter(lambda: 250.0, interval_s=1e9, clock=clk)
+        with meter:
+            clk.t += 0.03   # 30 ms op
+        res = meter.result
+        assert res.method == "snapshot"
+        np.testing.assert_allclose(res.energy_j, 250.0 * 0.03, rtol=1e-6)
+
+    def test_real_thread_sampling(self):
+        meter = EnergyMeter(lambda: 42.0, interval_s=0.005)
+        import time
+        with meter:
+            time.sleep(0.15)
+        assert meter.result.method == "trapezoid"
+        assert abs(meter.result.mean_power_w - 42.0) < 0.5
+
+
+class TestCounterCrossValidation:
+    def test_agreement_within_2pct_for_long_ops(self):
+        """>=200 ms ops: trapezoid and the mJ-granular counter agree <=2%."""
+        ctr = CounterCrossValidator(granularity_j=1e-3)
+        ts = np.arange(0, 0.2001, 0.05)
+        watts = 180 + 20 * np.sin(10 * ts)
+        for t0, t1, w in zip(ts, ts[1:], watts):
+            ctr.accumulate(w, t1 - t0)
+        trap = integrate_trace(ts, watts)
+        assert CounterCrossValidator.agreement(trap, ctr.read()) <= 0.02
+
+    def test_millijoule_granularity_unreliable_for_short(self):
+        """Short prefills: counter quantisation error dominates — the reason
+        the paper falls back to snapshot power."""
+        ctr = CounterCrossValidator(granularity_j=1e-3)
+        ctr.accumulate(200.0, 1e-5)   # 2 mJ true
+        # floor() quantisation keeps multiples of 1 mJ
+        assert ctr.read() in (0.001, 0.002)
+        err = CounterCrossValidator.agreement(0.002, ctr.read())
+        assert err <= 0.5  # but relative error can be huge vs trapezoid

@@ -1,0 +1,136 @@
+"""Sharding rules engine + HLO stats parser + mesh construction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, reduced_config
+from repro.launch.hlo_stats import collective_stats, shape_bytes
+from repro.launch.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    state_shardings,
+)
+from repro.models import abstract_cache, abstract_params
+
+
+@pytest.fixture(scope="module")
+def mesh44():
+    # host CPU has 1 device; build an abstract mesh for spec computation
+    devs = np.array(jax.devices() * 16).reshape(4, 4)
+    from jax.sharding import Mesh
+    return Mesh(devs, ("data", "model"))
+
+
+class TestParamRules:
+    def test_divisibility_always_respected(self, mesh44):
+        for arch in ("gemma-2b", "deepseek-v2-lite-16b", "zamba2-1.2b", "nemotron-4-15b"):
+            cfg = get_config(arch)
+            params = abstract_params(cfg)
+            shardings = param_shardings(params, mesh44)
+            flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+            flat_s = jax.tree.leaves(shardings, is_leaf=lambda x: hasattr(x, "spec"))
+            sizes = dict(zip(mesh44.axis_names, mesh44.devices.shape))
+            for (path, leaf), sh in zip(flat_p, flat_s):
+                for dim, axes in enumerate(sh.spec):
+                    if axes is None:
+                        continue
+                    axes = (axes,) if isinstance(axes, str) else axes
+                    total = int(np.prod([sizes[a] for a in axes]))
+                    assert leaf.shape[dim] % total == 0, (
+                        f"{arch} {jax.tree_util.keystr(path)} dim{dim} "
+                        f"{leaf.shape} not divisible by {axes}"
+                    )
+
+    def test_stacked_leading_dim_not_sharded(self, mesh44):
+        cfg = reduced_config("gemma2-9b")
+        params = abstract_params(cfg)
+        sh = param_shardings(params, mesh44)
+        spec = sh["stages"][0]["b0"]["attn"]["wq"].spec
+        assert spec[0] is None  # n_units stack dim replicated
+
+    def test_big_param_is_sharded(self, mesh44):
+        cfg = get_config("nemotron-4-15b")
+        params = abstract_params(cfg)
+        sh = param_shardings(params, mesh44)
+        spec = sh["stages"][0]["b0"]["mlp"]["w_up"].spec
+        assert any(s is not None for s in spec)
+
+    def test_moe_experts_on_model_axis(self, mesh44):
+        cfg = get_config("deepseek-v2-236b")
+        params = abstract_params(cfg)
+        sh = param_shardings(params, mesh44)
+        spec = sh["stages"][1]["b0"]["moe"]["w_up"].spec
+        assert spec[1] == "model"  # (n_units, E, d, ff): expert dim -> EP
+
+
+class TestCacheRules:
+    def test_kv_cache_batch_and_seq(self, mesh44):
+        cfg = get_config("gemma-2b")  # kv=1: heads cannot shard; seq must
+        cache = abstract_cache(cfg, 128, 32768)
+        sh = cache_shardings(cache, mesh44)
+        spec = sh["stages"][0]["b0"]["k"].spec
+        assert spec[1] == "data"       # batch (after n_units dim)
+        assert spec[2] == "model"      # sequence
+        assert spec[3] is None         # kv=1
+
+    def test_batch_one_long_context(self, mesh44):
+        cfg = get_config("zamba2-1.2b")
+        cache = abstract_cache(cfg, 1, 524288)
+        sh = cache_shardings(cache, mesh44)
+        kspec = sh["stages"][0]["b5"]["k"].spec
+        assert kspec[1] is None        # batch=1 unshardable
+        assert kspec[2] in ("model", "data")  # sequence sharded
+
+
+class TestBatchShardings:
+    def test_divisible_batch(self, mesh44):
+        sh = batch_shardings(jax.ShapeDtypeStruct((128, 64), jnp.int32), mesh44)
+        assert sh.spec[0] == "data"
+
+    def test_indivisible_batch_replicates(self, mesh44):
+        sh = batch_shardings(jax.ShapeDtypeStruct((3, 64), jnp.int32), mesh44)
+        assert sh.spec[0] is None
+
+
+class TestHLOStats:
+    def test_shape_bytes(self):
+        assert shape_bytes("bf16[128,256]{1,0}") == 128 * 256 * 2
+        assert shape_bytes("f32[16]") == 64
+        assert shape_bytes("(bf16[8,8], f32[4])") == 128 + 16
+        assert shape_bytes("pred[10]") == 10
+
+    def test_collective_parsing(self):
+        hlo = """
+  %p0 = bf16[16,128]{1,0} parameter(0)
+  %ag = bf16[64,128]{1,0} all-gather(bf16[16,128]{1,0} %p0), replica_groups={}
+  %ar = f32[32]{0} all-reduce(f32[32]{0} %x), to_apply=%sum
+  %rs = f32[8]{0} reduce-scatter(f32[32]{0} %y), dimensions={0}
+  %cp = u32[4]{0} collective-permute(u32[4]{0} %z), source_target_pairs={{0,1}}
+"""
+        cs = collective_stats(hlo)
+        assert cs.count_by_op == {
+            "all-gather": 1, "all-reduce": 1, "reduce-scatter": 1, "collective-permute": 1,
+        }
+        assert cs.bytes_by_op["all-gather"] == 16 * 128 * 2  # operand, not result
+        assert cs.bytes_by_op["reduce-scatter"] == 32 * 4
+        assert cs.total_count == 4
+
+    def test_async_pairs_counted_once(self):
+        hlo = """
+  %ags = (bf16[16]{0}, bf16[64]{0}) all-gather-start(bf16[16]{0} %p0)
+  %agd = bf16[64]{0} all-gather-done((bf16[16]{0}, bf16[64]{0}) %ags)
+"""
+        cs = collective_stats(hlo)
+        assert cs.total_count == 1
+
+
+class TestMesh:
+    def test_data_axes(self):
+        from repro.launch.mesh import data_axes
+        from jax.sharding import Mesh
+        devs = np.array(jax.devices() * 8).reshape(2, 2, 2)
+        m3 = Mesh(devs, ("pod", "data", "model"))
+        assert data_axes(m3) == ("pod", "data")

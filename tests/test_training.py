@@ -1,0 +1,244 @@
+"""Training substrate: loss decreases, chunked CE == naive CE, WSD schedule,
+grad compression with error feedback, checkpoint elastic reshard, fault
+tolerance."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import reduced_config
+from repro.models import init_params
+from repro.training import (
+    AdamW,
+    DataConfig,
+    PackedLMStream,
+    PreemptionGuard,
+    StepWatchdog,
+    chunked_softmax_xent,
+    init_train_state,
+    latest_step,
+    make_train_step,
+    restore_checkpoint,
+    run_with_restarts,
+    save_checkpoint,
+    wsd_schedule,
+)
+from repro.training.compression import (
+    compress_with_feedback,
+    dequantize_int8,
+    init_error_buffer,
+    quantize_int8,
+)
+
+
+class TestChunkedCE:
+    def test_matches_naive(self):
+        key = jax.random.PRNGKey(0)
+        B, S, D, V = 2, 13, 16, 50
+        h = jax.random.normal(key, (B, S, D))
+        table = jax.random.normal(jax.random.fold_in(key, 1), (V, D))
+        labels = jax.random.randint(jax.random.fold_in(key, 2), (B, S), 0, V)
+        chunked = chunked_softmax_xent(h, table, labels, chunk=4)
+        logits = h @ table.T
+        naive = -jnp.mean(
+            jnp.take_along_axis(jax.nn.log_softmax(logits), labels[..., None], -1)
+        )
+        np.testing.assert_allclose(float(chunked), float(naive), rtol=1e-5)
+
+    def test_mask(self):
+        key = jax.random.PRNGKey(1)
+        h = jax.random.normal(key, (1, 8, 8))
+        table = jax.random.normal(jax.random.fold_in(key, 1), (20, 8))
+        labels = jax.random.randint(jax.random.fold_in(key, 2), (1, 8), 0, 20)
+        mask = jnp.array([[1, 1, 1, 1, 0, 0, 0, 0]], jnp.float32)
+        full = chunked_softmax_xent(h[:, :4], table, labels[:, :4], chunk=2)
+        masked = chunked_softmax_xent(h, table, labels, mask=mask, chunk=2)
+        np.testing.assert_allclose(float(full), float(masked), rtol=1e-5)
+
+    def test_grad_flows(self):
+        key = jax.random.PRNGKey(2)
+        h = jax.random.normal(key, (1, 6, 8))
+        table = jax.random.normal(jax.random.fold_in(key, 1), (20, 8))
+        labels = jax.random.randint(jax.random.fold_in(key, 2), (1, 6), 0, 20)
+        g = jax.grad(lambda t: chunked_softmax_xent(h, t, labels, chunk=2))(table)
+        assert np.isfinite(np.asarray(g)).all() and float(jnp.sum(jnp.abs(g))) > 0
+
+
+class TestWSD:
+    def test_shape(self):
+        sched = wsd_schedule(1e-3, 10, 100, 20, min_lr_frac=0.1)
+        lr = lambda s: float(sched(jnp.asarray(s)))
+        assert lr(0) == 0.0
+        np.testing.assert_allclose(lr(5), 5e-4, rtol=1e-6)     # warmup
+        np.testing.assert_allclose(lr(10), 1e-3, rtol=1e-6)    # peak
+        np.testing.assert_allclose(lr(60), 1e-3, rtol=1e-6)    # stable
+        np.testing.assert_allclose(lr(130), 1e-4, rtol=1e-3)   # decayed
+        np.testing.assert_allclose(lr(110), 1e-3, rtol=1e-6)   # decay boundary
+
+
+class TestCompression:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=50, deadline=None)
+    def test_quantize_roundtrip_bounded(self, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 3.0
+        q, scale = quantize_int8(x)
+        err = np.max(np.abs(np.asarray(dequantize_int8(q, scale) - x)))
+        assert err <= float(scale) / 2 + 1e-7
+
+    def test_error_feedback_preserves_sum(self):
+        """EF property: cumulative applied gradient tracks cumulative true
+        gradient (error does not accumulate unboundedly)."""
+        key = jax.random.PRNGKey(0)
+        grads = [jax.random.normal(jax.random.fold_in(key, i), (32,)) for i in range(20)]
+        buf = init_error_buffer(grads[0])
+        applied_sum = jnp.zeros((32,))
+        true_sum = jnp.zeros((32,))
+        for g in grads:
+            out, buf = compress_with_feedback(g, buf)
+            applied_sum += out
+            true_sum += g
+        # residual equals the final error buffer
+        np.testing.assert_allclose(
+            np.asarray(true_sum - applied_sum), np.asarray(buf), rtol=1e-4, atol=1e-5
+        )
+
+    def test_training_with_compression_still_learns(self):
+        cfg = reduced_config("minicpm-2b")
+        opt = AdamW()
+        sched = wsd_schedule(1e-3, 2, 10, 5)
+        step = jax.jit(make_train_step(cfg, opt, sched, compression=True))
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        state = init_train_state(cfg, params, opt, compression=True)
+        data = PackedLMStream(cfg, DataConfig(seq_len=32, batch_size=4))
+        losses = []
+        for _ in range(6):
+            batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+
+
+class TestTrainStep:
+    def test_loss_decreases_microbatched(self):
+        cfg = reduced_config("gemma-2b")
+        opt = AdamW()
+        sched = wsd_schedule(1e-3, 2, 20, 5)
+        step = jax.jit(make_train_step(cfg, opt, sched, microbatches=2))
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        state = init_train_state(cfg, params, opt)
+        data = PackedLMStream(cfg, DataConfig(seq_len=32, batch_size=4))
+        losses = []
+        for _ in range(8):
+            batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+        assert all(np.isfinite(losses))
+
+    def test_microbatch_equals_full_batch_grads(self):
+        """Grad accumulation is exact (same update as one big batch)."""
+        cfg = reduced_config("minicpm-2b")
+        opt = AdamW()
+        sched = wsd_schedule(1e-3, 1, 10, 5)
+        s1 = jax.jit(make_train_step(cfg, opt, sched, microbatches=1))
+        s2 = jax.jit(make_train_step(cfg, opt, sched, microbatches=2))
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        data = PackedLMStream(cfg, DataConfig(seq_len=16, batch_size=4))
+        batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        st1 = init_train_state(cfg, params, opt)
+        st2 = init_train_state(cfg, params, opt)
+        st1, m1 = s1(st1, batch)
+        st2, m2 = s2(st2, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+        l1 = jax.tree.leaves(st1.params)[1]
+        l2 = jax.tree.leaves(st2.params)[1]
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-6)
+
+
+class TestCheckpointing:
+    def test_roundtrip_and_gc(self):
+        cfg = reduced_config("zamba2-1.2b")
+        opt = AdamW()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        state = init_train_state(cfg, params, opt)
+        with tempfile.TemporaryDirectory() as d:
+            for s in (1, 2, 3, 4, 5):
+                save_checkpoint(d, s, state, keep=3)
+            steps = sorted(int(x.split("_")[1]) for x in os.listdir(d))
+            assert steps == [3, 4, 5]
+            like = jax.eval_shape(lambda: state)
+            restored = restore_checkpoint(d, 5, like)
+            for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_incomplete_checkpoint_ignored(self):
+        cfg = reduced_config("gemma-2b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 7, {"p": params["final_norm"]["scale"]})
+            os.makedirs(os.path.join(d, "step_000000009"))
+            assert latest_step(d) == 7
+
+    def test_elastic_reshard_on_restore(self):
+        """Save unsharded, restore with per-leaf shardings onto a mesh — the
+        grow/shrink-the-pod path."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = jax.make_mesh((1,), ("data",))
+        x = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 1, x)
+            restored = restore_checkpoint(
+                d, 1, jax.eval_shape(lambda: x),
+                sharding_fn=lambda path, leaf: NamedSharding(mesh, P("data")),
+            )
+            np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(x["w"]))
+            assert restored["w"].sharding.spec == P("data")
+
+
+class TestFaultTolerance:
+    def test_watchdog_fires_on_stall(self):
+        t = [0.0]
+        wd = StepWatchdog(stall_factor=2.0, min_stall_s=1.0, clock=lambda: t[0])
+        for _ in range(3):
+            t[0] += 1.0
+            wd.beat()
+        t[0] += 5.0
+        assert wd.check()
+        assert not wd.check()  # fires once per stalled beat
+
+    def test_watchdog_quiet_on_steady_progress(self):
+        t = [0.0]
+        wd = StepWatchdog(stall_factor=3.0, min_stall_s=0.5, clock=lambda: t[0])
+        for _ in range(10):
+            t[0] += 0.3
+            wd.beat()
+            assert not wd.check()
+
+    def test_preemption_guard_flag(self):
+        g = PreemptionGuard(install=False)
+        assert not g.should_stop
+        g.trigger()
+        assert g.should_stop
+
+    def test_run_with_restarts_recovers(self):
+        calls = []
+
+        def body(resume):
+            calls.append(resume)
+            if len(calls) < 3:
+                raise RuntimeError("transient")
+
+        rep = run_with_restarts(body, max_restarts=5, latest_step_fn=lambda: len(calls) * 10)
+        assert rep.completed and rep.restarts == 2
+        assert calls == [0, 10, 20]
+
+    def test_run_with_restarts_budget_exhausted(self):
+        def body(resume):
+            raise RuntimeError("persistent")
+
+        rep = run_with_restarts(body, max_restarts=2)
+        assert not rep.completed and rep.restarts == 2
