@@ -19,6 +19,7 @@ def main() -> None:
         kernels_micro,
         policy_bench,
         roofline_report,
+        serve_cluster,
         table1_power_cap,
         tpu_native,
     )
@@ -31,6 +32,7 @@ def main() -> None:
         fig4_request_energy,
         hypotheses_bench,
         policy_bench,
+        serve_cluster,
         tpu_native,
         kernels_micro,
         roofline_report,

@@ -14,13 +14,22 @@ Layers:
 from repro.core.workload import Workload, decode_workload, prefill_workload, model_flops_per_token
 from repro.core.energy import EnergyModel, StepProfile
 from repro.core.dvfs import ClockLock, Default, PowerCap, OperatingPoint, resolve
-from repro.core.policy import ClockChoice, PolicyRow, best_clock, classify_arch, min_energy_clock, policy_table
+from repro.core.policy import (
+    ClockChoice,
+    PolicyRow,
+    best_clock,
+    classify_arch,
+    min_energy_clock,
+    policy_row,
+    policy_table,
+)
 from repro.core.pareto import ParetoPoint, cap_degeneracy, frontier, lock_dominates_caps, sweep_levers
 from repro.core.crossover import RequestEnergy, crossover_output_length, energy_curve, request_energy
 from repro.core.metering import (
     CounterCrossValidator,
     EnergyMeasurement,
     EnergyMeter,
+    GaugeSource,
     PowerSampler,
     PowerTrace,
     integrate_trace,
@@ -32,11 +41,12 @@ __all__ = [
     "Workload", "decode_workload", "prefill_workload", "model_flops_per_token",
     "EnergyModel", "StepProfile",
     "ClockLock", "Default", "PowerCap", "OperatingPoint", "resolve",
-    "ClockChoice", "PolicyRow", "best_clock", "classify_arch", "min_energy_clock", "policy_table",
+    "ClockChoice", "PolicyRow", "best_clock", "classify_arch", "min_energy_clock",
+    "policy_row", "policy_table",
     "ParetoPoint", "cap_degeneracy", "frontier", "lock_dominates_caps", "sweep_levers",
     "RequestEnergy", "crossover_output_length", "energy_curve", "request_energy",
-    "CounterCrossValidator", "EnergyMeasurement", "EnergyMeter", "PowerSampler",
-    "PowerTrace", "integrate_trace",
+    "CounterCrossValidator", "EnergyMeasurement", "EnergyMeter", "GaugeSource",
+    "PowerSampler", "PowerTrace", "integrate_trace",
     "HypothesisResult", "evaluate_hypotheses",
     "Record", "characterize", "filter_records", "to_csv",
 ]

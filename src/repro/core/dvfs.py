@@ -52,6 +52,12 @@ class OperatingPoint:
         return self.profile.power_w
 
     @property
+    def clock_gap_mhz(self) -> float:
+        """Configured-vs-actual clock gap for lock levers (Table 1's silent
+        clamp); 0 for caps/default where ``configured`` is not in MHz."""
+        return self.configured - self.actual_clock_mhz if self.lever == "lock" else 0.0
+
+    @property
     def throughput(self) -> float:
         return self.profile.throughput
 

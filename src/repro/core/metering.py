@@ -30,9 +30,32 @@ class PowerTrace:
     watts: List[float]
 
     def integrate_trapezoid(self) -> float:
-        if len(self.times_s) < 2:
+        # snapshot to a common length: a live sampler thread may be between
+        # its two appends when a reader integrates the trace
+        n = min(len(self.times_s), len(self.watts))
+        if n < 2:
             return 0.0
-        return float(np.trapezoid(self.watts, self.times_s))
+        return float(np.trapezoid(self.watts[:n], self.times_s[:n]))
+
+
+class GaugeSource:
+    """Mutable power source: a controller writes watts as the operating
+    point moves; a sampler thread reads it. This is how each serving pool's
+    sampler sees "the energy model evaluated at the pool's current operating
+    point" without the sampler knowing anything about levers or workloads.
+    """
+
+    def __init__(self, watts: float = 0.0):
+        self._watts = float(watts)
+        self._lock = threading.Lock()
+
+    def set(self, watts: float):
+        with self._lock:
+            self._watts = float(watts)
+
+    def __call__(self) -> float:
+        with self._lock:
+            return self._watts
 
 
 class PowerSampler:

@@ -100,8 +100,50 @@ class PolicyRow:
     prefill_clock: float
     est_savings_w: float              # vs default governor, decode BS=1
 
+    def clock_for(self, regime: str) -> float:
+        """Column lookup for one (pool, regime): the lock to apply."""
+        table = {
+            "prefill": self.prefill_clock,
+            "bs1": self.decode_clock_bs1,
+            "bs32": self.decode_clock_bs32,
+            "bs32_long": self.decode_clock_bs32_long,
+        }
+        try:
+            return table[regime]
+        except KeyError:
+            raise KeyError(f"unknown regime {regime!r}; have {sorted(table)}") from None
+
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
+
+
+def policy_row(
+    model: EnergyModel,
+    name: str,
+    cfg: ModelConfig,
+    *,
+    budget: float = 0.01,
+    context: int = 1024,
+    long_context: int = 16384,
+) -> PolicyRow:
+    """One architecture's row of the deployable policy table."""
+    from repro.core.dvfs import Default  # local to avoid cycle confusion
+
+    d1 = best_clock(model, decode_workload(cfg, 1, context), budget=budget)
+    d32 = best_clock(model, decode_workload(cfg, 32, context), budget=budget)
+    d32l = best_clock(model, decode_workload(cfg, 32, long_context), budget=budget)
+    pf = best_clock(model, prefill_workload(cfg, 1, 4096), budget=budget)
+    base = resolve(model, decode_workload(cfg, 1, context), Default())
+    lock = resolve(model, decode_workload(cfg, 1, context), ClockLock(d1.clock_mhz))
+    return PolicyRow(
+        arch=name,
+        dvfs_class=classify_arch(model, cfg, context=context, budget=budget),
+        decode_clock_bs1=d1.clock_mhz,
+        decode_clock_bs32=d32.clock_mhz,
+        decode_clock_bs32_long=d32l.clock_mhz,
+        prefill_clock=pf.clock_mhz,
+        est_savings_w=base.power_w - lock.power_w,
+    )
 
 
 def policy_table(
@@ -113,25 +155,8 @@ def policy_table(
     long_context: int = 16384,
 ) -> List[PolicyRow]:
     """The deployable artefact: one static lock per (arch, pool, regime)."""
-    from repro.core.dvfs import Default  # local to avoid cycle confusion
-
-    rows = []
-    for name, cfg in cfgs.items():
-        d1 = best_clock(model, decode_workload(cfg, 1, context), budget=budget)
-        d32 = best_clock(model, decode_workload(cfg, 32, context), budget=budget)
-        d32l = best_clock(model, decode_workload(cfg, 32, long_context), budget=budget)
-        pf = best_clock(model, prefill_workload(cfg, 1, 4096), budget=budget)
-        base = resolve(model, decode_workload(cfg, 1, context), Default())
-        lock = resolve(model, decode_workload(cfg, 1, context), ClockLock(d1.clock_mhz))
-        rows.append(
-            PolicyRow(
-                arch=name,
-                dvfs_class=classify_arch(model, cfg, context=context, budget=budget),
-                decode_clock_bs1=d1.clock_mhz,
-                decode_clock_bs32=d32.clock_mhz,
-                decode_clock_bs32_long=d32l.clock_mhz,
-                prefill_clock=pf.clock_mhz,
-                est_savings_w=base.power_w - lock.power_w,
-            )
-        )
-    return rows
+    return [
+        policy_row(model, name, cfg, budget=budget, context=context,
+                   long_context=long_context)
+        for name, cfg in cfgs.items()
+    ]

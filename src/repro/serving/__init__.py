@@ -1,4 +1,18 @@
-"""Serving substrate: continuous-batching engine with phase accounting."""
+"""Serving substrate: phase pools, the single-pool engine, and the
+phase-disaggregated cluster with its energy-aware clock controller."""
+from repro.serving.cluster import Cluster, Scheduler
+from repro.serving.controller import ClockController, Transition
 from repro.serving.engine import EOS, PhaseStats, Request, ServingEngine
+from repro.serving.pool import Pool
 
-__all__ = ["EOS", "PhaseStats", "Request", "ServingEngine"]
+__all__ = [
+    "EOS",
+    "PhaseStats",
+    "Request",
+    "ServingEngine",
+    "Pool",
+    "Cluster",
+    "Scheduler",
+    "ClockController",
+    "Transition",
+]

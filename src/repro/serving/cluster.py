@@ -1,0 +1,200 @@
+"""Phase-disaggregated serving: prefill pool + decode pool + scheduler.
+
+The paper's deployment recipe (§7.1) made executable: prefill and decode
+run on separate pools so each can hold its phase-optimal operating point
+statically — decode never engages a power cap, so only a clock lock can
+save energy there, while prefill genuinely needs the high clock.
+
+Topology::
+
+    submit() -> waiting queue
+                  |  Scheduler (chunked-prefill admission: a token budget
+                  |  per tick bounds how much prefill work is launched,
+                  v  so decode latency stays bounded under prompt bursts)
+            prefill pool  -- batch-1 bucketed prefill -->  cache row
+                  |                                           |
+                  |        migration (jitted scatter into a free slot)
+                  v                                           v
+            decode pool   -- one jitted step over ALL slots per tick -->
+
+A ``ClockController`` (optional) ticks before every scheduler step: each
+pool's lever is re-resolved from its live occupancy/context regime, its
+``PowerSampler`` gauge tracks the modelled power of that operating point,
+and per-request prefill/decode joules accumulate at the pool's current
+energy/token. With no controller the cluster still serves — it just runs
+unmetered, like the seed engine did.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.serving.controller import ClockController
+from repro.serving.pool import PhaseStats, Pool, Request
+
+
+class Scheduler:
+    """Chunked-prefill admission with a per-tick prefill token budget.
+
+    Credits accrue ``chunk_tokens`` per tick while requests wait AND a
+    decode slot is free, capped at ``max(chunk_tokens, head prompt
+    length)``; a request is admitted (prefilled + migrated) only once
+    accrued credit covers its prompt. Long prompts therefore spread their
+    prefill admission over several decode ticks — the Sarathi-style
+    interleaving knob — while the queue is drained in FIFO order (several
+    small requests can admit in one tick as long as they fit the chunk
+    budget). The cap plus the reset on an empty queue mean neither an idle
+    cluster nor a full decode pool can bank credit that would later
+    release one giant prefill burst.
+    """
+
+    def __init__(self, chunk_tokens: int = 256):
+        if chunk_tokens < 1:
+            raise ValueError("chunk_tokens must be >= 1")
+        self.chunk_tokens = chunk_tokens
+        self.migrations = 0
+        self._credit = 0.0
+
+    def tick(
+        self,
+        waiting: List[Request],
+        prefill_pool: Pool,
+        decode_pool: Pool,
+    ) -> List[Request]:
+        if not waiting:
+            self._credit = 0.0
+            return []
+        if decode_pool.has_free_slot():
+            # accrue only while admission is possible, capped at
+            # max(chunk, head need) — a full decode pool must not bank
+            # credit that later releases one giant prefill burst
+            self._credit = min(
+                self._credit + self.chunk_tokens,
+                max(float(self.chunk_tokens), float(len(waiting[0].prompt))),
+            )
+        admitted: List[Request] = []
+        while waiting and decode_pool.has_free_slot():
+            req = waiting[0]
+            try:
+                decode_pool.validate(req)
+            except ValueError:
+                # drop the poison request before surfacing the error, or it
+                # would block the queue head forever (engine semantics)
+                waiting.pop(0)
+                raise
+            need = len(req.prompt)
+            if need > self._credit:
+                break
+            waiting.pop(0)
+            self._credit -= need
+            first, cache1 = prefill_pool.prefill_request(req)
+            decode_pool.place(req, cache1, first, need)
+            self.migrations += 1
+            admitted.append(req)
+        return admitted
+
+
+class Cluster:
+    """Disaggregated prefill/decode serving over one model replica pair."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        *,
+        controller: Optional[ClockController] = None,
+        prefill_batch: int = 1,
+        decode_batch: int = 8,
+        max_seq_len: int = 4096,
+        prefill_chunk_tokens: int = 256,
+        rng_seed: int = 0,
+        clock: Callable[[], float] = time.perf_counter,
+        meter_interval_s: float = 0.050,
+    ):
+        self.cfg = cfg
+        self.prefill_pool = Pool(
+            cfg, params, role="prefill", max_batch=max(1, prefill_batch),
+            max_seq_len=max_seq_len, rng_seed=rng_seed, clock=clock,
+            meter_interval_s=meter_interval_s,
+        )
+        self.decode_pool = Pool(
+            cfg, params, role="decode", max_batch=decode_batch,
+            max_seq_len=max_seq_len, rng_seed=rng_seed, clock=clock,
+            meter_interval_s=meter_interval_s,
+        )
+        self.controller = controller
+        self.scheduler = Scheduler(prefill_chunk_tokens)
+        self.waiting: List[Request] = []
+        self._uid = 0
+        self._step_no = 0
+
+    # ------------------------------------------------------------------ api
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
+        req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens)
+        self._uid += 1
+        self.waiting.append(req)
+        return req
+
+    def pools(self) -> Dict[str, Pool]:
+        return {"prefill": self.prefill_pool, "decode": self.decode_pool}
+
+    def step(self) -> List[Request]:
+        """One cluster tick: retune clocks, admit/migrate, decode."""
+        self._step_no += 1
+        if self.controller is not None:
+            self.controller.tick(self.pools(), self._step_no)
+        admitted = self.scheduler.tick(self.waiting, self.prefill_pool, self.decode_pool)
+        if self.controller is not None and admitted:
+            # admission changed decode occupancy: re-resolve so this step's
+            # tokens are priced at the true post-admission operating point
+            self.controller.tick(self.pools(), self._step_no)
+        return self.decode_pool.decode_once()
+
+    def busy(self) -> bool:
+        return bool(self.waiting) or self.decode_pool.occupancy() > 0
+
+    def run_to_completion(self, max_steps: int = 100000) -> List[Request]:
+        done: List[Request] = []
+        steps = 0
+        self.start_metering()
+        try:
+            while self.busy() and steps < max_steps:
+                done.extend(self.step())
+                steps += 1
+        finally:
+            self.stop_metering()
+        return done
+
+    # ------------------------------------------------------------- metering
+    def start_metering(self):
+        for pool in self.pools().values():
+            pool.start_metering()
+
+    def stop_metering(self) -> Dict[str, float]:
+        """Stop both samplers; return cumulative joules per pool."""
+        return {name: p.stop_metering() for name, p in self.pools().items()}
+
+    def measured_energy_j(self) -> Dict[str, float]:
+        """Cumulative per-pool joules across all runs — same lifetime scope
+        as ``stats``, so measured and modelled energy stay comparable even
+        when the cluster is run in several batches."""
+        return {name: p.measured_energy_j() for name, p in self.pools().items()}
+
+    # ----------------------------------------------------------------- stats
+    @property
+    def prefill_stats(self) -> PhaseStats:
+        return self.prefill_pool.stats
+
+    @property
+    def decode_stats(self) -> PhaseStats:
+        return self.decode_pool.stats
+
+    @property
+    def stats(self) -> PhaseStats:
+        """Cluster-wide phase totals (clock fields are the decode pool's —
+        the phase the paper's capping claim is about)."""
+        return self.decode_pool.stats.merged_with(self.prefill_pool.stats)

@@ -1,0 +1,169 @@
+"""Energy-aware clock controller: the policy table resolved online.
+
+The paper's §6.4 artefact is a static table — one lock per (arch, pool,
+regime). This controller closes the loop the deployment recipe (§7.1)
+implies: every scheduler tick it observes each pool's batch occupancy and
+context-length regime, picks the matching ``PolicyRow`` column, and applies
+the lever through ``repro.core.dvfs.resolve`` so the pool's operating point
+(power, energy/token, configured-vs-actual clock) is always current.
+
+Two deliberate behaviours:
+
+* The controller requests ``spec.effective_lock(column)`` rather than the
+  raw column — it KNOWS about the firmware clamp (§5.2) and never issues a
+  request that would be silently rewritten, so configured == actual for
+  every lock it places (no "double disguise" inside our own stack).
+* Every lever change is recorded as a ``Transition`` — the audit trail the
+  paper's Table 1 methodology (configured vs actual) needs at serving time.
+
+Modes mirror the benchmark grid: "default" (governor), "cap" (the industry
+reflex; inert for decode), "lock" (the paper's fix).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional
+
+from repro.core.dvfs import ClockLock, Default, Lever, OperatingPoint, PowerCap, resolve
+from repro.core.energy import EnergyModel
+from repro.core.policy import PolicyRow, policy_row
+from repro.core.workload import decode_workload, prefill_workload
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Transition:
+    """One lever change on one pool (the controller's audit trail)."""
+    step: int
+    pool: str
+    regime: str
+    lever: str                    # "lock" | "cap" | "default"
+    configured: float             # MHz for locks, W for caps
+    actual_clock_mhz: float
+    engaged: bool
+
+
+class ClockController:
+    """Per-pool lever selection from batch occupancy + context regime."""
+
+    def __init__(
+        self,
+        emodel: EnergyModel,
+        arch_cfg: ModelConfig,
+        *,
+        mode: str = "lock",                  # "lock" | "cap" | "default"
+        budget: float = 0.01,
+        context: int = 1024,
+        long_context: int = 16384,
+        batch_hi_threshold: int = 8,         # occupancy at/above which the
+                                             # pool maps to the BS=32 column
+        prefill_seq: int = 4096,
+        cap_w: Optional[float] = None,
+        fused: bool = False,
+    ):
+        if mode not in ("lock", "cap", "default"):
+            raise ValueError(f"unknown controller mode {mode!r}")
+        self.emodel = emodel
+        self.arch_cfg = arch_cfg
+        self.mode = mode
+        self.budget = budget
+        self.context = context
+        self.long_context = long_context
+        self.batch_hi_threshold = batch_hi_threshold
+        self.prefill_seq = prefill_seq
+        self.cap_w = cap_w if cap_w is not None else min(emodel.spec.power_cap_levels)
+        self.fused = fused
+        self.transitions: List[Transition] = []
+        self._row: Optional[PolicyRow] = None
+        self._last: Dict[str, Lever] = {}    # pool name -> last applied lever
+
+    # ------------------------------------------------------------ policy row
+    @property
+    def row(self) -> PolicyRow:
+        """The arch's policy-table row, resolved once and cached."""
+        if self._row is None:
+            self._row = policy_row(
+                self.emodel, self.arch_cfg.name, self.arch_cfg,
+                budget=self.budget, context=self.context,
+                long_context=self.long_context,
+            )
+        return self._row
+
+    # -------------------------------------------------------------- regimes
+    def regime_for(self, role: str, occupancy: int, mean_context: float) -> str:
+        """Map live pool state to a policy-table column."""
+        if role == "prefill":
+            return "prefill"
+        if mean_context >= self.long_context and occupancy >= self.batch_hi_threshold:
+            return "bs32_long"
+        if occupancy >= self.batch_hi_threshold:
+            return "bs32"
+        return "bs1"
+
+    def lever_for(self, regime: str) -> Lever:
+        if self.mode == "default":
+            return Default()
+        if self.mode == "cap":
+            return PowerCap(self.cap_w)
+        # lock: request the clock the firmware will actually deliver — the
+        # controller never issues a request above the clamp.
+        requested = self.emodel.spec.effective_lock(self.row.clock_for(regime))
+        return ClockLock(requested)
+
+    def decode_lock_mhz(self, occupancy: int, mean_context: Optional[float] = None) -> float:
+        """The lock (MHz) a decode pool at this occupancy would receive.
+
+        Pure probe used by tests/benchmarks — no pool state is touched.
+        """
+        ctx = self.context if mean_context is None else mean_context
+        regime = self.regime_for("decode", occupancy, ctx)
+        return self.emodel.spec.effective_lock(self.row.clock_for(regime))
+
+    # ----------------------------------------------------------- the closure
+    def _resolve(self, role: str, occupancy: int, mean_context: float,
+                 lever: Lever) -> OperatingPoint:
+        """Resolve an already-chosen lever against the pool's live workload."""
+        if role == "prefill":
+            w = prefill_workload(self.arch_cfg, 1, self.prefill_seq, fused=self.fused)
+        else:
+            ctx = max(int(mean_context), 1) if mean_context else self.context
+            w = decode_workload(self.arch_cfg, max(occupancy, 1), ctx, fused=self.fused)
+        return resolve(self.emodel, w, lever)
+
+    def operating_point(self, role: str, occupancy: int, mean_context: float) -> OperatingPoint:
+        """Regime + lever + resolve in one call (probe/test convenience)."""
+        lever = self.lever_for(self.regime_for(role, occupancy, mean_context))
+        return self._resolve(role, occupancy, mean_context, lever)
+
+    def tick(self, pools: Mapping[str, "Pool"], step: int):  # noqa: F821
+        """Apply the regime-matched lever to every pool; record transitions."""
+        for name, pool in pools.items():
+            occ = pool.occupancy()
+            ctx = pool.mean_context()
+            regime = self.regime_for(pool.role, occ, ctx)
+            lever = self.lever_for(regime)
+            op = self._resolve(pool.role, occ, ctx, lever)
+            # keyed on the lever alone: a regime flip that resolves to the
+            # same lever (batch-invariant archs, default mode) is not a
+            # lever transition
+            if self._last.get(name) != lever:
+                self._last[name] = lever
+                self.transitions.append(
+                    Transition(
+                        step=step,
+                        pool=name,
+                        regime=regime,
+                        lever=op.lever,
+                        configured=op.configured,
+                        actual_clock_mhz=op.actual_clock_mhz,
+                        engaged=op.engaged,
+                    )
+                )
+            pool.idle_power_w = self.emodel.spec.p_idle
+            # a colocated pool (role "mixed") runs both phases at ONE lever
+            # — the compromise disaggregation removes. Price its prefill
+            # tokens at the prefill workload resolved under that same lever.
+            prefill_op = None
+            if pool.role not in ("prefill", "decode"):
+                prefill_op = self._resolve("prefill", 1, ctx, lever)
+            pool.set_operating_point(op, prefill_op)

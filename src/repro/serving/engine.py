@@ -1,72 +1,30 @@
-"""Serving engine: continuous batching over a static slot pool.
+"""Serving engine: the single-pool facade over the phase-pool machinery.
 
 Phase-aware by construction (the paper's measurement unit): every prefill
 and every decode step is accounted separately in ``PhaseStats`` — wall time,
-token counts — so the energy layer (repro.core.metering) can integrate
-power per phase exactly as the paper does per-request.
+token counts, and (when a ``ClockController`` is attached) joules at the
+pool's current operating point — so the energy layer (repro.core.metering)
+can integrate power per phase exactly as the paper does per-request.
 
-JAX-shape discipline:
-* decode runs one jitted step over ALL slots (static batch = max_batch,
-  per-slot lengths, active mask);
-* prefill runs batch-1 with prompt lengths padded to power-of-2 buckets
-  (bounded recompilation), then the filled cache row is scattered into the
-  slot pool.
+Since the phase-disaggregation refactor all slot/cache/jit machinery lives
+in ``repro.serving.pool.Pool``; this engine is the colocated deployment
+shape (one pool runs both phases, the mainstream baseline the paper
+measures), while ``repro.serving.cluster.Cluster`` is the disaggregated
+recipe (§7.1). The public API — ``submit`` / ``step`` /
+``run_to_completion`` / ``stats`` — is unchanged from the seed.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, init_cache, prefill
 from repro.models.config import ModelConfig
+from repro.serving.controller import ClockController
+from repro.serving.pool import EOS, PhaseStats, Pool, Request
 
-EOS = 0
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray                     # (L,) int32
-    max_new_tokens: int = 32
-    temperature: float = 0.0
-    # filled by the engine
-    output: List[int] = dataclasses.field(default_factory=list)
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    done: bool = False
-
-
-@dataclasses.dataclass
-class PhaseStats:
-    prefill_tokens: int = 0
-    prefill_s: float = 0.0
-    prefill_calls: int = 0
-    decode_tokens: int = 0
-    decode_s: float = 0.0
-    decode_steps: int = 0
-
-    def merge_prefill(self, tokens: int, secs: float):
-        self.prefill_tokens += tokens
-        self.prefill_s += secs
-        self.prefill_calls += 1
-
-    def merge_decode(self, tokens: int, secs: float):
-        self.decode_tokens += tokens
-        self.decode_s += secs
-        self.decode_steps += 1
-
-
-def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
-    for b in buckets:
-        if n <= b:
-            return b
-    return int(2 ** np.ceil(np.log2(n)))
+__all__ = ["EOS", "PhaseStats", "Request", "ServingEngine"]
 
 
 class ServingEngine:
@@ -79,53 +37,33 @@ class ServingEngine:
         max_seq_len: int = 4096,
         rng_seed: int = 0,
         clock: Callable[[], float] = time.perf_counter,
+        controller: Optional[ClockController] = None,
     ):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq_len = max_seq_len
         self.clock = clock
-        self.stats = PhaseStats()
-
-        self.cache = init_cache(cfg, max_batch, max_seq_len)
-        self.lengths = jnp.zeros((max_batch,), jnp.int32)
-        self.cur_token = jnp.zeros((max_batch,), jnp.int32)
-        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        # "mixed": one pool runs both phases at one lever — the colocated
+        # baseline. A controller prices prefill/decode tokens separately.
+        self.pool = Pool(
+            cfg, params, role="mixed", max_batch=max_batch,
+            max_seq_len=max_seq_len, rng_seed=rng_seed, clock=clock,
+        )
+        self.controller = controller
         self.waiting: List[Request] = []
         self._uid = 0
-        self._key = jax.random.PRNGKey(rng_seed)
-
-        self._jit_prefill = jax.jit(self._prefill_impl, static_argnames=("bucket",))
-        self._jit_decode = jax.jit(self._decode_impl)
-        self._jit_scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
-
-    # ------------------------------------------------------------- internals
-    def _prefill_impl(self, params, tokens, true_len, bucket):
-        cache1 = init_cache(self.cfg, 1, self.max_seq_len)
-        logits, cache1, _ = prefill(
-            params, self.cfg, tokens, cache1, prompt_lengths=true_len
-        )
-        return logits, cache1
-
-    def _scatter_impl(self, big_cache, small_cache, slot):
-        # stage-cache leaves are stacked (n_units, B, ...): batch axis is 1
-        return jax.tree.map(
-            lambda big, small: jax.lax.dynamic_update_slice_in_dim(big, small, slot, axis=1),
-            big_cache,
-            small_cache,
-        )
-
-    def _decode_impl(self, params, tokens, cache, lengths, active, key, temperature=0.0):
-        logits, new_cache, new_lengths = decode_step(params, self.cfg, tokens, cache, lengths)
-        if temperature > 0.0:
-            gumbel = -jnp.log(-jnp.log(jax.random.uniform(key, logits.shape) + 1e-9) + 1e-9)
-            next_tok = jnp.argmax(logits / temperature + gumbel, axis=-1).astype(jnp.int32)
-        else:
-            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        new_lengths = jnp.where(active, new_lengths, lengths)
-        return next_tok, new_cache, new_lengths
+        self._step_no = 0
 
     # ------------------------------------------------------------------ api
+    @property
+    def stats(self) -> PhaseStats:
+        return self.pool.stats
+
+    @property
+    def slot_req(self) -> List[Optional[Request]]:
+        return self.pool.slot_req
+
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
         req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens)
@@ -133,77 +71,33 @@ class ServingEngine:
         self.waiting.append(req)
         return req
 
-    def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
-
-    def _admit(self):
-        for slot in self._free_slots():
+    def _admit(self) -> int:
+        admitted = 0
+        for _ in self.pool.free_slots():
             if not self.waiting:
                 break
             req = self.waiting.pop(0)
-            l = len(req.prompt)
-            if l + req.max_new_tokens > self.max_seq_len:
-                raise ValueError(
-                    f"request {req.uid}: prompt {l} + max_new {req.max_new_tokens} "
-                    f"exceeds engine max_seq_len {self.max_seq_len}"
-                )
-            bucket = min(_bucket(l), self.max_seq_len)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :l] = req.prompt
-            t0 = self.clock()
-            logits, cache1 = self._jit_prefill(
-                self.params, jnp.asarray(toks), jnp.asarray([l], jnp.int32), bucket=bucket
-            )
-            first = int(np.argmax(np.asarray(logits)[0]))
-            jax.block_until_ready(logits)
-            dt = self.clock() - t0
-            self.stats.merge_prefill(l, dt)
-            req.prefill_s += dt
-
-            self.cache = self._jit_scatter(self.cache, cache1, slot)
-            self.lengths = self.lengths.at[slot].set(l)
-            self.cur_token = self.cur_token.at[slot].set(first)
-            req.output.append(first)
-            self.slot_req[slot] = req
-
-    def _active_mask(self) -> np.ndarray:
-        return np.array([r is not None for r in self.slot_req])
+            self.pool.validate(req)
+            first, cache1 = self.pool.prefill_request(req)
+            self.pool.place(req, cache1, first, len(req.prompt))
+            admitted += 1
+        return admitted
 
     def step(self) -> List[Request]:
         """Admit waiting requests, run one decode step, return finished ones."""
-        self._admit()
-        active = self._active_mask()
-        finished: List[Request] = []
-        if not active.any():
-            return finished
-        self._key, sub = jax.random.split(self._key)
-        t0 = self.clock()
-        next_tok, self.cache, self.lengths = self._jit_decode(
-            self.params, self.cur_token, self.cache, self.lengths,
-            jnp.asarray(active), sub,
-        )
-        next_np = np.asarray(next_tok)
-        dt = self.clock() - t0
-        n_active = int(active.sum())
-        self.stats.merge_decode(n_active, dt)
-        self.cur_token = next_tok
-
-        for i, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            req.decode_s += dt / max(n_active, 1)
-            tok = int(next_np[i])
-            req.output.append(tok)
-            if tok == EOS or len(req.output) >= req.max_new_tokens:
-                req.done = True
-                finished.append(req)
-                self.slot_req[i] = None
-        return finished
+        self._step_no += 1
+        if self.controller is not None:
+            self.controller.tick({"mixed": self.pool}, self._step_no)
+        admitted = self._admit()
+        if self.controller is not None and admitted:
+            # re-resolve at the true post-admission occupancy (see Cluster.step)
+            self.controller.tick({"mixed": self.pool}, self._step_no)
+        return self.pool.decode_once()
 
     def run_to_completion(self, max_steps: int = 100000) -> List[Request]:
         done: List[Request] = []
         steps = 0
-        while (self.waiting or any(r is not None for r in self.slot_req)) and steps < max_steps:
+        while (self.waiting or self.pool.occupancy() > 0) and steps < max_steps:
             done.extend(self.step())
             steps += 1
         return done

@@ -1,0 +1,360 @@
+"""Phase pool: the slot/cache machinery one serving phase runs on.
+
+A ``Pool`` owns the JAX-side state the old monolithic engine carried —
+static slot pool, stacked KV/state cache, jitted prefill/decode/scatter —
+plus the energy-side state the disaggregated cluster needs:
+
+* ``PhaseStats`` with per-phase joules and the configured-vs-actual clock
+  of the lever currently applied to this pool (the paper's Table 1 gap);
+* a mutable power gauge + ``PowerSampler`` (repro.core.metering) so each
+  pool is metered exactly like the paper meters a device: 50 ms polling of
+  the pool's *current* operating point;
+* an ``OperatingPoint`` slot written by a ClockController — the pool itself
+  never picks clocks, it only accounts at whatever point it was put.
+
+JAX-shape discipline is unchanged from the seed engine: decode runs one
+jitted step over ALL slots (static batch, per-slot lengths, active mask);
+prefill runs batch-1 with prompt lengths padded to power-of-2 buckets, and
+the filled cache row is scattered into a slot — in the cluster that scatter
+IS the prefill->decode migration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dvfs import OperatingPoint
+from repro.core.metering import GaugeSource, PowerSampler
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+
+EOS = 0
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                     # (L,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    # filled by the pool/scheduler
+    output: List[int] = dataclasses.field(default_factory=list)
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    prefill_j: float = 0.0                 # modelled joules at the pool's op
+    decode_j: float = 0.0
+    done: bool = False
+
+    @property
+    def energy_j(self) -> float:
+        return self.prefill_j + self.decode_j
+
+
+@dataclasses.dataclass
+class PhaseStats:
+    prefill_tokens: int = 0
+    prefill_s: float = 0.0
+    prefill_calls: int = 0
+    decode_tokens: int = 0
+    decode_s: float = 0.0
+    decode_steps: int = 0
+    # energy attribution at the pool's operating point (0 when unmetered)
+    prefill_j: float = 0.0
+    decode_j: float = 0.0
+    # lever state last applied to the pool that produced these stats
+    configured_clock_mhz: float = 0.0
+    actual_clock_mhz: float = 0.0
+    lever_engaged: bool = False
+
+    def merge_prefill(self, tokens: int, secs: float, joules: float = 0.0):
+        self.prefill_tokens += tokens
+        self.prefill_s += secs
+        self.prefill_calls += 1
+        self.prefill_j += joules
+
+    def merge_decode(self, tokens: int, secs: float, joules: float = 0.0):
+        self.decode_tokens += tokens
+        self.decode_s += secs
+        self.decode_steps += 1
+        self.decode_j += joules
+
+    def note_operating_point(self, op: OperatingPoint):
+        self.actual_clock_mhz = float(op.actual_clock_mhz)
+        # OperatingPoint.clock_gap_mhz owns the "configured is only MHz for
+        # locks" rule; don't reimplement it here
+        self.configured_clock_mhz = self.actual_clock_mhz + op.clock_gap_mhz
+        self.lever_engaged = bool(op.engaged)
+
+    @property
+    def clock_gap_mhz(self) -> float:
+        """Configured-vs-actual lock gap (the §5.2 'double disguise')."""
+        return self.configured_clock_mhz - self.actual_clock_mhz
+
+    @property
+    def energy_j(self) -> float:
+        return self.prefill_j + self.decode_j
+
+    def merged_with(self, other: "PhaseStats") -> "PhaseStats":
+        """Fieldwise token/time/energy sum; clock fields keep ``self``'s."""
+        return PhaseStats(
+            prefill_tokens=self.prefill_tokens + other.prefill_tokens,
+            prefill_s=self.prefill_s + other.prefill_s,
+            prefill_calls=self.prefill_calls + other.prefill_calls,
+            decode_tokens=self.decode_tokens + other.decode_tokens,
+            decode_s=self.decode_s + other.decode_s,
+            decode_steps=self.decode_steps + other.decode_steps,
+            prefill_j=self.prefill_j + other.prefill_j,
+            decode_j=self.decode_j + other.decode_j,
+            configured_clock_mhz=self.configured_clock_mhz,
+            actual_clock_mhz=self.actual_clock_mhz,
+            lever_engaged=self.lever_engaged,
+        )
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return int(2 ** np.ceil(np.log2(n)))
+
+
+class Pool:
+    """Slot pool + jitted model calls + phase/energy accounting for one phase."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        *,
+        role: str = "decode",              # "prefill" | "decode"
+        max_batch: int = 8,
+        max_seq_len: int = 4096,
+        rng_seed: int = 0,
+        clock: Callable[[], float] = time.perf_counter,
+        meter_interval_s: float = 0.050,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.role = role
+        self.max_batch = max_batch
+        self.max_seq_len = max_seq_len
+        self.clock = clock
+        self.stats = PhaseStats()
+
+        # energy side: operating point is written by a ClockController; the
+        # gauge feeds this pool's sampler so the metering stack sees the
+        # modelled power of whatever point the pool currently runs at, or
+        # the idle floor while the pool has no work.
+        self.op: Optional[OperatingPoint] = None
+        self.prefill_op: Optional[OperatingPoint] = None
+        self.idle_power_w: float = 0.0
+        self.gauge = GaugeSource(0.0)
+        self.sampler = PowerSampler(self.gauge, interval_s=meter_interval_s)
+        self._in_phase_call = False
+        self._metering_active = False
+        self._measured_j_total = 0.0
+
+        # decode-slot arrays allocate lazily on first placement, so a
+        # prefill-role pool never holds an unused stacked KV cache
+        self.cache = None
+        self.lengths = None
+        self.cur_token = None
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self._key = jax.random.PRNGKey(rng_seed)
+
+        self._jit_prefill = jax.jit(self._prefill_impl, static_argnames=("bucket",))
+        self._jit_decode = jax.jit(self._decode_impl)
+        self._jit_scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
+
+    # ------------------------------------------------------------- internals
+    def _prefill_impl(self, params, tokens, true_len, bucket):
+        cache1 = init_cache(self.cfg, 1, self.max_seq_len)
+        logits, cache1, _ = prefill(
+            params, self.cfg, tokens, cache1, prompt_lengths=true_len
+        )
+        return logits, cache1
+
+    def _scatter_impl(self, big_cache, small_cache, slot):
+        # stage-cache leaves are stacked (n_units, B, ...): batch axis is 1
+        return jax.tree.map(
+            lambda big, small: jax.lax.dynamic_update_slice_in_dim(big, small, slot, axis=1),
+            big_cache,
+            small_cache,
+        )
+
+    def _decode_impl(self, params, tokens, cache, lengths, active, key, temperature=0.0):
+        logits, new_cache, new_lengths = decode_step(params, self.cfg, tokens, cache, lengths)
+        if temperature > 0.0:
+            gumbel = -jnp.log(-jnp.log(jax.random.uniform(key, logits.shape) + 1e-9) + 1e-9)
+            next_tok = jnp.argmax(logits / temperature + gumbel, axis=-1).astype(jnp.int32)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        new_lengths = jnp.where(active, new_lengths, lengths)
+        return next_tok, new_cache, new_lengths
+
+    # ------------------------------------------------------- energy plumbing
+    def set_operating_point(self, op: OperatingPoint, prefill_op: Optional[OperatingPoint] = None):
+        """Apply a controller-resolved point; ``prefill_op`` prices prefill
+        tokens separately when one pool runs both phases (colocated engine)."""
+        self.op = op
+        self.prefill_op = prefill_op if prefill_op is not None else op
+        self.stats.note_operating_point(op)
+        self._refresh_gauge()
+
+    def _refresh_gauge(self):
+        # inside a prefill call the device burns prefill power; between
+        # ticks a pool holding live slots burns its decode-point power;
+        # an empty pool sits at the idle floor
+        if self._in_phase_call and self.prefill_op is not None:
+            self.gauge.set(self.prefill_op.power_w)
+        elif self.op is not None and self.occupancy() > 0:
+            self.gauge.set(self.op.power_w)
+        else:
+            self.gauge.set(self.idle_power_w)
+
+    @property
+    def current_power_w(self) -> float:
+        return self.gauge()
+
+    def _mj_per_token(self, phase: str = "decode") -> float:
+        op = self.prefill_op if phase == "prefill" else self.op
+        return op.energy_per_token_mj if op is not None else 0.0
+
+    def start_metering(self):
+        if self._metering_active:
+            return
+        self._metering_active = True
+        self.sampler.start()                 # resets the trace for this window
+
+    def stop_metering(self) -> float:
+        """Stop the sampler; bank the window's joules; return the total."""
+        if self._metering_active:
+            self._metering_active = False
+            self.sampler.stop()
+            self._measured_j_total += self.sampler.trace.integrate_trapezoid()
+        return self._measured_j_total
+
+    def measured_energy_j(self) -> float:
+        """Joules across ALL metering windows (plus the live one, if any) —
+        the same lifetime scope as this pool's PhaseStats."""
+        live = self.sampler.trace.integrate_trapezoid() if self._metering_active else 0.0
+        return self._measured_j_total + live
+
+    # ------------------------------------------------------------- occupancy
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def has_free_slot(self) -> bool:
+        return any(r is None for r in self.slot_req)
+
+    def occupancy(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def mean_context(self) -> float:
+        mask = self.active_mask()
+        if not mask.any():
+            return 0.0
+        # one device transfer for the whole vector — this runs every tick
+        return float(np.asarray(self.lengths)[mask].mean())
+
+    def _ensure_decode_state(self):
+        if self.cache is None:
+            self.cache = init_cache(self.cfg, self.max_batch, self.max_seq_len)
+            self.lengths = jnp.zeros((self.max_batch,), jnp.int32)
+            self.cur_token = jnp.zeros((self.max_batch,), jnp.int32)
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([r is not None for r in self.slot_req])
+
+    def validate(self, req: Request):
+        l = len(req.prompt)
+        if l + req.max_new_tokens > self.max_seq_len:
+            raise ValueError(
+                f"request {req.uid}: prompt {l} + max_new {req.max_new_tokens} "
+                f"exceeds engine max_seq_len {self.max_seq_len}"
+            )
+
+    # ------------------------------------------------------------ phase work
+    def prefill_request(self, req: Request) -> Tuple[int, Any]:
+        """Run the bucketed batch-1 prefill; returns (first_token, cache row).
+
+        The returned cache row is placed with ``place`` — on this pool for the
+        single-pool engine, on the decode pool for the disaggregated cluster.
+        """
+        l = len(req.prompt)
+        bucket = min(_bucket(l), self.max_seq_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :l] = req.prompt
+        self._in_phase_call = True
+        self._refresh_gauge()
+        t0 = self.clock()
+        try:
+            logits, cache1 = self._jit_prefill(
+                self.params, jnp.asarray(toks), jnp.asarray([l], jnp.int32), bucket=bucket
+            )
+            first = int(np.argmax(np.asarray(logits)[0]))
+            jax.block_until_ready(logits)
+        finally:
+            dt = self.clock() - t0
+            self._in_phase_call = False
+            self._refresh_gauge()
+        joules = self._mj_per_token("prefill") * l / 1e3
+        self.stats.merge_prefill(l, dt, joules)
+        req.prefill_s += dt
+        req.prefill_j += joules
+        return first, cache1
+
+    def place(self, req: Request, cache1: Any, first_token: int, length: int) -> int:
+        """Scatter a filled batch-1 cache row into a free slot (migration)."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("place() on a full pool — check has_free_slot() first")
+        self._ensure_decode_state()
+        slot = free[0]
+        self.cache = self._jit_scatter(self.cache, cache1, slot)
+        self.lengths = self.lengths.at[slot].set(length)
+        self.cur_token = self.cur_token.at[slot].set(first_token)
+        req.output.append(first_token)
+        self.slot_req[slot] = req
+        self._refresh_gauge()
+        return slot
+
+    def decode_once(self) -> List[Request]:
+        """One jitted decode step over all slots; returns finished requests."""
+        active = self.active_mask()
+        finished: List[Request] = []
+        if not active.any():
+            return finished
+        self._ensure_decode_state()
+        self._key, sub = jax.random.split(self._key)
+        t0 = self.clock()
+        next_tok, self.cache, self.lengths = self._jit_decode(
+            self.params, self.cur_token, self.cache, self.lengths,
+            jnp.asarray(active), sub,
+        )
+        next_np = np.asarray(next_tok)
+        dt = self.clock() - t0
+        n_active = int(active.sum())
+        mj = self._mj_per_token()
+        self.stats.merge_decode(n_active, dt, mj * n_active / 1e3)
+        self.cur_token = next_tok
+
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            req.decode_s += dt / max(n_active, 1)
+            req.decode_j += mj / 1e3
+            tok = int(next_np[i])
+            req.output.append(tok)
+            if tok == EOS or len(req.output) >= req.max_new_tokens:
+                req.done = True
+                finished.append(req)
+                self.slot_req[i] = None
+        if finished:
+            self._refresh_gauge()
+        return finished

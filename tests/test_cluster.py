@@ -1,0 +1,217 @@
+"""Disaggregated cluster: output equivalence with the single-pool engine,
+phase-stats conservation, chunked-prefill admission, energy attribution."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core import EnergyModel
+from repro.hw import H200_SXM
+from repro.models import init_params
+from repro.serving import ClockController, Cluster, ServingEngine
+from repro.training import make_prompts
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("gemma-2b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _controller(mode="lock"):
+    return ClockController(EnergyModel(H200_SXM), get_config("gemma-2b"), mode=mode)
+
+
+class TestEquivalence:
+    def test_cluster_matches_engine_greedy_outputs(self, setup):
+        """Same prompts, greedy decoding, same seed: the disaggregated path
+        (prefill pool -> migration -> decode pool) must produce token-for-
+        token identical outputs to the colocated engine."""
+        cfg, params = setup
+        prompts = make_prompts(cfg, 5, 4, 12, seed=1)
+
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq_len=64)
+        ereqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+        eng.run_to_completion()
+
+        cl = Cluster(cfg, params, decode_batch=2, max_seq_len=64,
+                     prefill_chunk_tokens=64)
+        creqs = [cl.submit(p, max_new_tokens=6) for p in prompts]
+        cl.run_to_completion()
+
+        assert all(r.done for r in creqs)
+        for e, c in zip(ereqs, creqs):
+            assert e.output == c.output
+
+    def test_equivalence_holds_under_controller(self, setup):
+        """Clock levers change energy accounting, never tokens."""
+        cfg, params = setup
+        prompts = make_prompts(cfg, 3, 4, 10, seed=2)
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq_len=64)
+        ereqs = [eng.submit(p, max_new_tokens=5) for p in prompts]
+        eng.run_to_completion()
+
+        cl = Cluster(cfg, params, controller=_controller("lock"),
+                     decode_batch=2, max_seq_len=64, prefill_chunk_tokens=32)
+        creqs = [cl.submit(p, max_new_tokens=5) for p in prompts]
+        cl.run_to_completion()
+        for e, c in zip(ereqs, creqs):
+            assert e.output == c.output
+
+
+class TestPhaseConservation:
+    def test_token_totals_equal_per_request_sums(self, setup):
+        cfg, params = setup
+        prompts = make_prompts(cfg, 6, 4, 14, seed=3)
+        cl = Cluster(cfg, params, controller=_controller("lock"),
+                     decode_batch=3, max_seq_len=64, prefill_chunk_tokens=64)
+        reqs = [cl.submit(p, max_new_tokens=5) for p in prompts]
+        cl.run_to_completion()
+
+        assert cl.stats.prefill_tokens == sum(len(p) for p in prompts)
+        assert cl.stats.prefill_calls == len(prompts)
+        # every generated token beyond the prefill's first belongs to decode
+        assert cl.stats.decode_tokens == sum(len(r.output) - 1 for r in reqs)
+        # phases live on disjoint pools in the cluster
+        assert cl.prefill_stats.decode_steps == 0
+        assert cl.decode_stats.prefill_calls == 0
+
+    def test_energy_totals_equal_per_request_sums(self, setup):
+        cfg, params = setup
+        prompts = make_prompts(cfg, 4, 4, 12, seed=4)
+        cl = Cluster(cfg, params, controller=_controller("lock"),
+                     decode_batch=2, max_seq_len=64, prefill_chunk_tokens=64)
+        reqs = [cl.submit(p, max_new_tokens=4) for p in prompts]
+        cl.run_to_completion()
+        np.testing.assert_allclose(
+            cl.stats.prefill_j, sum(r.prefill_j for r in reqs), rtol=1e-9)
+        np.testing.assert_allclose(
+            cl.stats.decode_j, sum(r.decode_j for r in reqs), rtol=1e-9)
+        assert cl.stats.energy_j > 0
+
+    def test_per_pool_clock_disaggregation(self, setup):
+        """The whole point of disaggregation: pools hold different locks."""
+        cfg, params = setup
+        ctl = _controller("lock")
+        cl = Cluster(cfg, params, controller=ctl, decode_batch=2,
+                     max_seq_len=64, prefill_chunk_tokens=64)
+        for p in make_prompts(cfg, 3, 4, 10, seed=5):
+            cl.submit(p, max_new_tokens=4)
+        cl.run_to_completion()
+        pre, dec = cl.prefill_stats, cl.decode_stats
+        assert pre.actual_clock_mhz == ctl.row.prefill_clock
+        assert dec.actual_clock_mhz <= pre.actual_clock_mhz
+        # controller requests what the firmware delivers: no silent gap
+        assert pre.clock_gap_mhz == 0.0 and dec.clock_gap_mhz == 0.0
+
+
+class TestScheduler:
+    def test_chunked_admission_spreads_prefill(self, setup):
+        """With a chunk budget smaller than a prompt, admission takes
+        several ticks — prefill work is rate-limited, not front-loaded."""
+        cfg, params = setup
+        prompts = make_prompts(cfg, 3, 10, 12, seed=6)
+        cl = Cluster(cfg, params, decode_batch=3, max_seq_len=64,
+                     prefill_chunk_tokens=4)
+        for p in prompts:
+            cl.submit(p, max_new_tokens=3)
+        first_tick_admissions = len(
+            cl.scheduler.tick(cl.waiting, cl.prefill_pool, cl.decode_pool))
+        assert first_tick_admissions == 0          # 4 credits < 10-token prompt
+        done = cl.run_to_completion()
+        assert len(done) == 3                      # ...but everyone completes
+        assert cl.scheduler.migrations == 3
+
+    def test_more_requests_than_slots(self, setup):
+        cfg, params = setup
+        cl = Cluster(cfg, params, decode_batch=2, max_seq_len=64,
+                     prefill_chunk_tokens=64)
+        reqs = [cl.submit(p, max_new_tokens=6)
+                for p in make_prompts(cfg, 5, 4, 12, seed=7)]
+        done = cl.run_to_completion()
+        assert len(done) == 5
+        assert all(r.done for r in reqs)
+
+    def test_oversized_request_rejected(self, setup):
+        cfg, params = setup
+        cl = Cluster(cfg, params, decode_batch=1, max_seq_len=32,
+                     prefill_chunk_tokens=64)
+        cl.submit(np.arange(1, 30, dtype=np.int32), max_new_tokens=10)
+        ok = cl.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=3)
+        with pytest.raises(ValueError, match="exceeds engine max_seq_len"):
+            cl.step()
+        # the poison request is dropped; the queue behind it still serves
+        done = cl.run_to_completion()
+        assert [r.uid for r in done] == [ok.uid] and ok.done
+
+
+class TestMetering:
+    def test_pool_samplers_track_operating_points(self, setup):
+        """Each pool's sampler integrates the modelled power of the pool's
+        own operating point — the §3.1 methodology applied per pool."""
+        cfg, params = setup
+        ctl = _controller("lock")
+        cl = Cluster(cfg, params, controller=ctl, decode_batch=2,
+                     max_seq_len=64, prefill_chunk_tokens=64,
+                     meter_interval_s=0.005)
+        for p in make_prompts(cfg, 4, 4, 12, seed=8):
+            cl.submit(p, max_new_tokens=6)
+        cl.run_to_completion()
+        measured = cl.measured_energy_j()
+        assert measured["prefill"] > 0 and measured["decode"] > 0
+        # after the run both pools are idle: the gauge must have dropped to
+        # the idle floor, not kept integrating full-load watts
+        assert cl.prefill_pool.gauge() == pytest.approx(H200_SXM.p_idle)
+        assert cl.decode_pool.gauge() == pytest.approx(H200_SXM.p_idle)
+        # the trace saw busy-period watts well above idle, and its final
+        # sample (taken at sampler.stop() after the drain) is the idle floor
+        watts = cl.decode_pool.sampler.trace.watts
+        assert max(watts) > H200_SXM.p_idle + 1.0
+        assert watts[-1] == pytest.approx(H200_SXM.p_idle)
+
+    def test_measured_energy_accumulates_across_runs(self, setup):
+        """Measured joules cover the same lifetime as PhaseStats: a second
+        run_to_completion must add to, not replace, the first window."""
+        cfg, params = setup
+        cl = Cluster(cfg, params, controller=_controller("lock"), decode_batch=2,
+                     max_seq_len=64, prefill_chunk_tokens=64,
+                     meter_interval_s=0.005)
+        cl.submit(make_prompts(cfg, 1, 4, 10, seed=20)[0], max_new_tokens=6)
+        cl.run_to_completion()
+        after_first = cl.measured_energy_j()["decode"]
+        cl.submit(make_prompts(cfg, 1, 4, 10, seed=21)[0], max_new_tokens=6)
+        cl.run_to_completion()
+        after_second = cl.measured_energy_j()["decode"]
+        assert after_first > 0
+        assert after_second > after_first
+
+    def test_colocated_engine_prices_prefill_as_prefill(self, setup):
+        """One pool, one lever — but prefill tokens must be billed at the
+        prefill workload's energy/token, not decode's."""
+        cfg, params = setup
+        ctl = _controller("lock")
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq_len=64,
+                            controller=ctl)
+        for p in make_prompts(cfg, 3, 4, 10, seed=9):
+            eng.submit(p, max_new_tokens=4)
+        eng.run_to_completion()
+        s = eng.stats
+        assert s.prefill_j > 0 and s.decode_j > 0
+        # prefill op resolved under the SAME lever as the decode regime
+        pre, dec = eng.pool.prefill_op, eng.pool.op
+        assert pre is not dec
+        assert pre.actual_clock_mhz == dec.actual_clock_mhz
+        np.testing.assert_allclose(
+            s.prefill_j,
+            pre.energy_per_token_mj * s.prefill_tokens / 1e3, rtol=1e-9)
+
+    def test_prefill_pool_never_allocates_decode_slots(self, setup):
+        cfg, params = setup
+        cl = Cluster(cfg, params, decode_batch=2, max_seq_len=64,
+                     prefill_chunk_tokens=64)
+        for p in make_prompts(cfg, 3, 4, 10, seed=10):
+            cl.submit(p, max_new_tokens=3)
+        cl.run_to_completion()
+        assert cl.prefill_pool.cache is None      # lazy state never touched
+        assert cl.decode_pool.cache is not None

@@ -3,7 +3,7 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.dvfs import ClockLock, Default, PowerCap, resolve
 from repro.core.energy import EnergyModel

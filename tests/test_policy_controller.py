@@ -1,0 +1,134 @@
+"""ClockController properties on the paper grid (H200 spec).
+
+Three invariants from the issue/paper:
+* the controller never places a lock above the firmware clamp (1830 MHz),
+  and — stronger — never issues a request that would be silently rewritten;
+* a power cap stays engaged=False on EVERY decode workload in the paper
+  grid (the central claim: capping is illusory for decode);
+* controller lock choice is monotone non-decreasing in batch size for
+  batch-sensitive architectures.
+"""
+import pytest
+
+from _propcheck import given, settings, strategies as st
+from repro.configs.paper_models import PAPER_MODELS
+from repro.core import (
+    EnergyModel,
+    PowerCap,
+    classify_arch,
+    decode_workload,
+    resolve,
+)
+from repro.hw import H200_SXM
+from repro.serving import ClockController
+
+MODEL = EnergyModel(H200_SXM)
+CFGS = {k: v() for k, v in PAPER_MODELS.items()}
+CLAMP = H200_SXM.firmware_lock_clamp
+
+
+def controller(name, **kw):
+    return ClockController(MODEL, CFGS[name], mode=kw.pop("mode", "lock"), **kw)
+
+
+class TestClampSafety:
+    @pytest.mark.parametrize("name", sorted(CFGS))
+    def test_lock_never_above_clamp(self, name):
+        ctl = controller(name)
+        for role in ("prefill", "decode"):
+            for occ in (0, 1, 4, 8, 32):
+                for ctx in (128.0, 1024.0, 20000.0):
+                    op = ctl.operating_point(role, occ, ctx)
+                    assert op.lever == "lock"
+                    assert op.actual_clock_mhz <= CLAMP
+                    # the controller pre-applies effective_lock: the request
+                    # it issues is exactly what the firmware delivers
+                    assert op.configured == op.actual_clock_mhz
+
+    @given(occ=st.integers(0, 64), ctx=st.floats(1.0, 64000.0))
+    @settings(max_examples=100, deadline=None)
+    def test_lock_probe_never_above_clamp(self, occ, ctx):
+        ctl = controller("minitron-4b-mla")
+        assert ctl.decode_lock_mhz(occ, ctx) <= CLAMP
+
+
+class TestCapIllusion:
+    """The paper's central claim, at the controller's cap setting."""
+
+    @pytest.mark.parametrize("name", sorted(CFGS))
+    @pytest.mark.parametrize("batch", [1, 8, 32])
+    @pytest.mark.parametrize("context", [1024, 16384])
+    def test_cap_never_engages_on_decode_grid(self, name, batch, context):
+        cap_w = min(H200_SXM.power_cap_levels)
+        op = resolve(MODEL, decode_workload(CFGS[name], batch, context), PowerCap(cap_w))
+        assert not op.engaged, f"{name} bs={batch} ctx={context}: cap engaged"
+        # inert cap == default governor operating point
+        assert op.actual_clock_mhz == H200_SXM.governor_default_clock
+
+    @pytest.mark.parametrize("name", sorted(CFGS))
+    def test_cap_mode_controller_is_inert_on_decode(self, name):
+        ctl = controller(name, mode="cap")
+        for occ in (1, 8, 32):
+            op = ctl.operating_point("decode", occ, 1024.0)
+            assert op.lever == "cap" and not op.engaged
+
+
+class TestBatchMonotonicity:
+    BATCH_SENSITIVE = [n for n, c in sorted(CFGS.items())
+                       if classify_arch(MODEL, c) == "batch-sensitive"]
+
+    def test_grid_has_batch_sensitive_archs(self):
+        assert len(self.BATCH_SENSITIVE) >= 2   # mla + mamba2 in the paper
+
+    @pytest.mark.parametrize("name", BATCH_SENSITIVE)
+    def test_lock_monotone_in_occupancy(self, name):
+        ctl = controller(name)
+        locks = [ctl.decode_lock_mhz(occ) for occ in range(1, 33)]
+        assert all(a <= b for a, b in zip(locks, locks[1:]))
+        assert locks[-1] > locks[0]     # batch-sensitive: clock genuinely rises
+
+
+class TestTransitions:
+    def test_transitions_recorded_once_per_lever_change(self):
+        """Ticking the same pool state twice records one transition; a regime
+        change records another."""
+
+        class FakePool:
+            def __init__(self, role, occ, ctx):
+                self.role, self._occ, self._ctx = role, occ, ctx
+                self.op = None
+
+            def occupancy(self):
+                return self._occ
+
+            def mean_context(self):
+                return self._ctx
+
+            def set_operating_point(self, op, prefill_op=None):
+                self.op = op
+
+        ctl = controller("minitron-4b-mla", batch_hi_threshold=8)
+        pool = FakePool("decode", 1, 256.0)
+        ctl.tick({"decode": pool}, step=1)
+        ctl.tick({"decode": pool}, step=2)
+        assert len(ctl.transitions) == 1
+        assert ctl.transitions[0].regime == "bs1"
+
+        pool._occ = 16                      # crosses the BS=32 column
+        ctl.tick({"decode": pool}, step=3)
+        assert len(ctl.transitions) == 2
+        assert ctl.transitions[1].regime == "bs32"
+        assert ctl.transitions[1].actual_clock_mhz >= ctl.transitions[0].actual_clock_mhz
+        assert pool.op is not None and pool.op.lever == "lock"
+
+    def test_regime_table(self):
+        ctl = controller("qwen3-4b", batch_hi_threshold=8, long_context=16384)
+        assert ctl.regime_for("prefill", 0, 0.0) == "prefill"
+        assert ctl.regime_for("decode", 1, 1024.0) == "bs1"
+        assert ctl.regime_for("decode", 8, 1024.0) == "bs32"
+        assert ctl.regime_for("decode", 8, 20000.0) == "bs32_long"
+        assert ctl.regime_for("decode", 1, 20000.0) == "bs1"
+
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError, match="unknown controller mode"):
+            controller("qwen3-4b", mode="governor")

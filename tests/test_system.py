@@ -7,6 +7,8 @@ layer the paper's question and verify the headline answers hold.
 import os
 import tempfile
 
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -28,6 +30,8 @@ from repro.launch.train import run_training
 from repro.models import init_params
 from repro.serving import ServingEngine
 from repro.training import make_prompts, latest_step
+
+pytestmark = pytest.mark.slow  # full train->checkpoint->serve pipeline on real jit paths
 
 
 def test_train_checkpoint_restore_serve_end_to_end():
