@@ -12,7 +12,7 @@ Layers:
   characterize— the full sweep driver
 """
 from repro.core.workload import Workload, decode_workload, prefill_workload, model_flops_per_token
-from repro.core.energy import EnergyModel, StepProfile
+from repro.core.energy import EnergyModel, StepProfile, joules_from_hbm_traffic
 from repro.core.dvfs import ClockLock, Default, PowerCap, OperatingPoint, resolve
 from repro.core.policy import (
     ClockChoice,
@@ -32,6 +32,7 @@ from repro.core.metering import (
     GaugeSource,
     PowerSampler,
     PowerTrace,
+    TrafficCounter,
     integrate_trace,
 )
 from repro.core.hypotheses import HypothesisResult, evaluate_hypotheses
@@ -39,14 +40,14 @@ from repro.core.characterize import Record, characterize, filter_records, to_csv
 
 __all__ = [
     "Workload", "decode_workload", "prefill_workload", "model_flops_per_token",
-    "EnergyModel", "StepProfile",
+    "EnergyModel", "StepProfile", "joules_from_hbm_traffic",
     "ClockLock", "Default", "PowerCap", "OperatingPoint", "resolve",
     "ClockChoice", "PolicyRow", "best_clock", "classify_arch", "min_energy_clock",
     "policy_row", "policy_table",
     "ParetoPoint", "cap_degeneracy", "frontier", "lock_dominates_caps", "sweep_levers",
     "RequestEnergy", "crossover_output_length", "energy_curve", "request_energy",
     "CounterCrossValidator", "EnergyMeasurement", "EnergyMeter", "GaugeSource",
-    "PowerSampler", "PowerTrace", "integrate_trace",
+    "PowerSampler", "PowerTrace", "TrafficCounter", "integrate_trace",
     "HypothesisResult", "evaluate_hypotheses",
     "Record", "characterize", "filter_records", "to_csv",
 ]

@@ -80,9 +80,28 @@ class StepProfile:
         return max(parts, key=parts.get)  # type: ignore[arg-type]
 
 
+def joules_from_hbm_traffic(power_w: float, bytes_moved: float, hbm_bw_eff: float) -> float:
+    """Decode energy from MEASURED bytes moved (the paper's core claim made
+    operational): decode is HBM-bandwidth-bound, so the time a step spends
+    on a request is ``bytes / effective_bandwidth`` and its energy is board
+    power times that time. ``hbm_bw_eff`` is the achievable bandwidth
+    (``spec.hbm_bw * spec.hbm_eff``). Used by the paged serving pool, where
+    ``bytes_moved`` comes from the block-level ``TrafficCounter`` rather
+    than a shape-based estimate."""
+    if hbm_bw_eff <= 0:
+        return 0.0
+    return power_w * bytes_moved / hbm_bw_eff
+
+
 class EnergyModel:
     def __init__(self, spec: HardwareSpec):
         self.spec = spec
+
+    @property
+    def hbm_bw_eff(self) -> float:
+        """Achievable HBM bandwidth (bytes/s) — the denominator of every
+        traffic-derived decode-time/energy attribution."""
+        return self.spec.hbm_bw * self.spec.hbm_eff
 
     # ----------------------------------------------------------- time model
     def times(self, w: Workload, f_mhz: float) -> Tuple[float, float, float, float, float]:

@@ -25,6 +25,44 @@ import numpy as np
 
 
 @dataclasses.dataclass
+class TrafficCounter:
+    """Byte-accurate HBM traffic ledger for a paged cache.
+
+    The serving pool increments it once per decode step with the number of
+    cache blocks (and bytes) actually touched — reads stream whole blocks
+    (a partially-filled tail block still moves ``block_bytes`` over the
+    bus), writes append one token's worth of cache plus any recurrent-state
+    rewrite. The energy layer converts ``total_bytes`` into joules via
+    :func:`repro.core.energy.joules_from_hbm_traffic`, replacing the
+    shape-based estimate with measured traffic.
+    """
+
+    read_bytes: int = 0
+    write_bytes: int = 0
+    block_reads: int = 0
+    block_writes: int = 0
+    steps: int = 0
+
+    def count_reads(self, blocks: int, bytes_: int):
+        self.block_reads += int(blocks)
+        self.read_bytes += int(bytes_)
+
+    def count_writes(self, blocks: int, bytes_: int):
+        self.block_writes += int(blocks)
+        self.write_bytes += int(bytes_)
+
+    def count_step(self):
+        self.steps += 1
+
+    @property
+    def total_bytes(self) -> int:
+        return self.read_bytes + self.write_bytes
+
+    def snapshot(self) -> "TrafficCounter":
+        return dataclasses.replace(self)
+
+
+@dataclasses.dataclass
 class PowerTrace:
     times_s: List[float]
     watts: List[float]

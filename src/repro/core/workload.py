@@ -95,6 +95,13 @@ def _gemm_params(cfg: ModelConfig) -> int:
     return blocks_and_norm + emb  # + LM head GEMM
 
 
+def weight_stream_bytes(cfg: ModelConfig) -> int:
+    """HBM bytes of weights one decode step streams (once per step, shared
+    by the whole batch). Batch-amortised by the paged pool's traffic meter
+    when attributing per-request bytes."""
+    return int(_gemm_params(cfg) * BYTES)
+
+
 def _block_kind_counts(cfg: ModelConfig):
     counts: dict[str, int] = {}
     for k in cfg.block_kinds_flat():

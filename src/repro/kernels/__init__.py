@@ -3,24 +3,48 @@
 Four kernels, each with <name>.py (pl.pallas_call + BlockSpec), ops.py
 (jit'd wrapper) and ref.py (pure-jnp oracle):
 
-* decode_attn — flash-decode over a blocked KV cache (GQA/MQA)
+* decode_attn — flash-decode over a blocked KV cache (GQA/MQA), with a
+                paged variant that gathers K/V pages through a per-request
+                block table (scalar-prefetched BlockSpec index map)
 * mla_decode  — fused absorbed-MLA attention on the COMPRESSED latent cache
-                (the paper's §6.2 "fused decompression kernel")
+                (the paper's §6.2 "fused decompression kernel"), dense and
+                paged
 * ssd         — chunked Mamba2/SSD scan, state resident in VMEM
 * gdn         — fused gated-delta-rule recurrence (the §7.2 counterfactual
                 for the eager-mode prefill penalty)
 
-All validate against their oracles in interpret mode on CPU; on real TPU
-pass interpret=False.
+``common.py`` holds the shared wrapper plumbing (tile clamping / padding).
+All kernels validate against their oracles in interpret mode on CPU; on
+real TPU pass interpret=False.
 """
-from repro.kernels.decode_attn import decode_attention, gqa_decode_attention, decode_attention_ref
-from repro.kernels.mla_decode import mla_latent_decode, mla_fused_decode, mla_latent_decode_ref
+from repro.kernels.common import clamp_block, largest_divisor_block, pad_to_multiple
+from repro.kernels.decode_attn import (
+    decode_attention,
+    decode_attention_ref,
+    gqa_decode_attention,
+    gqa_paged_decode_attention,
+    paged_decode_attention,
+    paged_decode_attention_ref,
+)
+from repro.kernels.mla_decode import (
+    mla_fused_decode,
+    mla_latent_decode,
+    mla_latent_decode_ref,
+    mla_paged_fused_decode,
+    mla_paged_latent_decode,
+    mla_paged_latent_decode_ref,
+)
 from repro.kernels.ssd import ssd_scan, ssd_prefill, ssd_scan_ref
 from repro.kernels.gdn import gdn_scan, gdn_prefill, gdn_scan_ref
 
 __all__ = [
-    "decode_attention", "gqa_decode_attention", "decode_attention_ref",
-    "mla_latent_decode", "mla_fused_decode", "mla_latent_decode_ref",
+    "clamp_block", "largest_divisor_block", "pad_to_multiple",
+    "decode_attention", "paged_decode_attention",
+    "gqa_decode_attention", "gqa_paged_decode_attention",
+    "decode_attention_ref", "paged_decode_attention_ref",
+    "mla_latent_decode", "mla_paged_latent_decode",
+    "mla_fused_decode", "mla_paged_fused_decode",
+    "mla_latent_decode_ref", "mla_paged_latent_decode_ref",
     "ssd_scan", "ssd_prefill", "ssd_scan_ref",
     "gdn_scan", "gdn_prefill", "gdn_scan_ref",
 ]

@@ -1,0 +1,49 @@
+"""Shared wrapper plumbing for the Pallas kernels.
+
+Every kernel wrapper has to solve the same two problems before calling into
+``pallas_call``: pick a tile size for an axis whose true extent is a runtime
+shape, and pad that axis up to a tile multiple. The four ``ops.py`` wrappers
+used to each carry their own copy (one of them as the write-only expression
+``min(block, l) if l % min(block, l) == 0 else block`` — which always
+evaluates to ``min(block, l)``: when ``l >= block`` the two branches agree,
+and when ``l < block`` the condition ``l % l == 0`` is vacuously true).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clamp_block(block: int, length: int) -> int:
+    """Effective tile size for tiling an axis of extent ``length``.
+
+    Never larger than the axis itself (one tile then covers it exactly, so
+    no padding is needed); otherwise the requested ``block``, with callers
+    padding the axis up to a multiple via :func:`pad_to_multiple`.
+    """
+    if block < 1:
+        raise ValueError(f"block must be >= 1, got {block}")
+    return min(block, length)
+
+
+def largest_divisor_block(block: int, extent: int) -> int:
+    """Largest tile size <= ``block`` that divides ``extent`` exactly.
+
+    Used for axes that cannot be padded (e.g. head blocks, where a padded
+    head would change the reduction).
+    """
+    b = clamp_block(block, extent)
+    while extent % b:
+        b -= 1
+    return b
+
+
+def pad_to_multiple(x: jax.Array, block: int, *, axis: int, value=0.0) -> jax.Array:
+    """Pad ``axis`` of ``x`` up to the next multiple of ``block`` with
+    ``value`` (kernels mask or treat padded rows as exact no-ops)."""
+    pad = (-x.shape[axis]) % block
+    if not pad:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg, constant_values=value)

@@ -1,5 +1,9 @@
-from repro.kernels.decode_attn.decode_attn import decode_attention
-from repro.kernels.decode_attn.ops import gqa_decode_attention
-from repro.kernels.decode_attn.ref import decode_attention_ref
+from repro.kernels.decode_attn.decode_attn import decode_attention, paged_decode_attention
+from repro.kernels.decode_attn.ops import gqa_decode_attention, gqa_paged_decode_attention
+from repro.kernels.decode_attn.ref import decode_attention_ref, paged_decode_attention_ref
 
-__all__ = ["decode_attention", "gqa_decode_attention", "decode_attention_ref"]
+__all__ = [
+    "decode_attention", "paged_decode_attention",
+    "gqa_decode_attention", "gqa_paged_decode_attention",
+    "decode_attention_ref", "paged_decode_attention_ref",
+]

@@ -61,6 +61,103 @@ def _kernel(valid_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, sca
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_kernel(bt_ref, valid_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale, block_size):
+    j = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, Dk)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (block_size, Dk)
+    v = v_ref[0, :, 0].astype(jnp.float32)            # (block_size, Dv)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                         # (G, block_size)
+
+    # mask on LOGICAL position: block j of this request's table covers
+    # tokens [j*bs, (j+1)*bs) regardless of which physical page holds them.
+    # valid_ref is a whole-array scalar-prefetch operand: index by batch.
+    kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < valid_ref[pl.program_id(0)], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(
+    q: jax.Array,             # (B, H, Dk)
+    k_pages: jax.Array,       # (P, bs, KV, Dk) physical pages
+    v_pages: jax.Array,       # (P, bs, KV, Dv)
+    block_tables: jax.Array,  # (B, nb) int32: logical block -> physical page
+    valid_len: jax.Array,     # (B,) int32
+    *,
+    scale: float,
+    interpret: bool = True,
+) -> jax.Array:
+    """Flash decode over a PAGED cache: K/V pages are gathered through the
+    per-request block table instead of assuming contiguous rows.
+
+    The table is a scalar-prefetch operand, so the page id is known before
+    each grid step's DMA is issued — the (j -> block_tables[b, j]) indirection
+    happens in the BlockSpec index map and the HBM->VMEM stream touches
+    exactly the pages the table names (the byte-accuracy the traffic meter
+    counts). Table entries past a request's last block point at page 0 (the
+    reserved null page); their rows are masked by ``valid_len`` like padding
+    in the dense kernel. Grid = (batch, kv_head, nb) with the logical-block
+    axis innermost carrying the online-softmax scratch, exactly like the
+    dense schedule.
+    """
+    b, h, dk = q.shape
+    bs, kv = k_pages.shape[1], k_pages.shape[2]
+    dv = v_pages.shape[-1]
+    nb = block_tables.shape[1]
+    g = h // kv
+
+    qg = q.reshape(b, kv, g, dk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # block table + valid lengths
+        grid=(b, kv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dk), lambda bi, ki, j, bt, vl: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dk), lambda bi, ki, j, bt, vl: (bt[bi, j], 0, ki, 0)),
+            pl.BlockSpec((1, bs, 1, dv), lambda bi, ki, j, bt, vl: (bt[bi, j], 0, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv), lambda bi, ki, j, bt, vl: (bi, ki, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, block_size=bs),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, dv), q.dtype),
+        interpret=interpret,
+    )(block_tables, valid_len, qg, k_pages, v_pages)
+    return out.reshape(b, h, dv)
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
 def decode_attention(
     q: jax.Array,          # (B, H, Dk)

@@ -1,18 +1,20 @@
-"""Jit'd public wrapper for the flash-decode kernel.
+"""Jit'd public wrappers for the flash-decode kernels.
 
-``gqa_decode_attention`` adapts the model's cache layout
+``gqa_decode_attention`` adapts the model's dense cache layout
 ((B, L, KV, hd) + per-request lengths) to the kernel and pads L to the
-block size. On CPU containers the kernel body runs in interpret mode;
-set ``interpret=False`` on real TPU.
+block size; ``gqa_paged_decode_attention`` takes the paged layout
+((P, bs, KV, hd) pages + a per-request block table) as-is. On CPU
+containers the kernel bodies run in interpret mode; set
+``interpret=False`` on real TPU.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels.decode_attn.decode_attn import decode_attention
+from repro.kernels.common import clamp_block, pad_to_multiple
+from repro.kernels.decode_attn.decode_attn import decode_attention, paged_decode_attention
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
@@ -29,15 +31,37 @@ def gqa_decode_attention(
     squeeze = q.ndim == 4
     if squeeze:
         q = q[:, 0]
-    l = k_cache.shape[1]
-    block_k = min(block_k, l) if l % min(block_k, l) == 0 else block_k
-    pad = (-l) % block_k
-    if pad:
-        cfg = [(0, 0), (0, pad), (0, 0), (0, 0)]
-        k_cache = jnp.pad(k_cache, cfg)
-        v_cache = jnp.pad(v_cache, cfg)
+    block_k = clamp_block(block_k, k_cache.shape[1])
+    k_cache = pad_to_multiple(k_cache, block_k, axis=1)
+    v_cache = pad_to_multiple(v_cache, block_k, axis=1)
     out = decode_attention(
         q, k_cache, v_cache, valid_len,
         scale=scale, block_k=block_k, interpret=interpret,
+    )
+    return out[:, None] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def gqa_paged_decode_attention(
+    q: jax.Array,             # (B, 1, H, hd) or (B, H, hd)
+    k_pages: jax.Array,       # (P, bs, KV, hd) physical KV pages
+    v_pages: jax.Array,       # (P, bs, KV, hd)
+    block_tables: jax.Array,  # (B, nb) logical block -> physical page id
+    valid_len: jax.Array,     # (B,)
+    *,
+    scale: float,
+    interpret: bool = True,
+) -> jax.Array:
+    """Paged-cache flash decode: the model's block-table layout, unmodified.
+
+    No padding is ever needed — the page size IS the block size, and the
+    table width fixes the logical sequence extent.
+    """
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    out = paged_decode_attention(
+        q, k_pages, v_pages, block_tables, valid_len,
+        scale=scale, interpret=interpret,
     )
     return out[:, None] if squeeze else out

@@ -31,3 +31,21 @@ def decode_attention_ref(
     probs = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bkgl,blkd->bkgd", probs, v.astype(jnp.float32))
     return ctx.reshape(b, h, v.shape[-1]).astype(q.dtype)
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,             # (B, H, Dk)
+    k_pages: jax.Array,       # (P, bs, KV, Dk)
+    v_pages: jax.Array,       # (P, bs, KV, Dv)
+    block_tables: jax.Array,  # (B, nb)
+    valid_len: jax.Array,     # (B,)
+    scale: float,
+) -> jax.Array:
+    """Gather the pages each request's table names into a contiguous view,
+    then defer to the dense oracle — paging must be pure layout."""
+    b = q.shape[0]
+    bs, kv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_tables.shape[1]
+    k = k_pages[block_tables].reshape(b, nb * bs, kv, k_pages.shape[-1])
+    v = v_pages[block_tables].reshape(b, nb * bs, kv, v_pages.shape[-1])
+    return decode_attention_ref(q, k, v, valid_len, scale)

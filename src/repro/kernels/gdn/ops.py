@@ -4,8 +4,8 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.common import clamp_block, pad_to_multiple
 from repro.kernels.gdn.gdn import gdn_scan
 
 
@@ -21,14 +21,12 @@ def gdn_prefill(
     interpret: bool = True,
 ):
     bsz, s, h, kd = q.shape
-    q_chunk = min(q_chunk, s) if s % min(q_chunk, s) == 0 else q_chunk
-    pad = (-s) % q_chunk
-    if pad:
-        # beta=0 rows are exact no-ops (state untouched when alpha=1)
-        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        beta = jnp.pad(beta, ((0, 0), (0, pad), (0, 0)))
-        alpha = jnp.pad(alpha, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    q_chunk = clamp_block(q_chunk, s)
+    # beta=0 rows are exact no-ops (state untouched when alpha=1)
+    q = pad_to_multiple(q, q_chunk, axis=1)
+    k = pad_to_multiple(k, q_chunk, axis=1)
+    v = pad_to_multiple(v, q_chunk, axis=1)
+    beta = pad_to_multiple(beta, q_chunk, axis=1)
+    alpha = pad_to_multiple(alpha, q_chunk, axis=1, value=1.0)
     y, fs = gdn_scan(q, k, v, beta, alpha, q_chunk=q_chunk, interpret=interpret)
     return y[:, :s], fs

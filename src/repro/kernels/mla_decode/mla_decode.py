@@ -60,6 +60,106 @@ def _kernel(valid_ref, q_ref, kcat_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, 
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_kernel(bt_ref, valid_ref, qlat_ref, qrope_ref, ckv_ref, kr_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale, block_size):
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lat = qlat_ref[0].astype(jnp.float32)           # (H, rank)
+    q_rope = qrope_ref[0].astype(jnp.float32)         # (H, rope)
+    ckv = ckv_ref[0].astype(jnp.float32)              # (block_size, rank)
+    kr = kr_ref[0].astype(jnp.float32)                # (block_size, rope)
+
+    # rope and latent score contributions summed tile-locally — the two
+    # page arrays stay separate operands so NOTHING outside the table's
+    # pages is ever copied or streamed
+    s = (
+        jax.lax.dot_general(q_lat, ckv, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        + jax.lax.dot_general(q_rope, kr, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    ) * scale                                         # (H, block_size)
+    # logical position of this table slot; valid_ref is whole-array
+    # scalar-prefetch, indexed by the batch grid coordinate
+    kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < valid_ref[pl.program_id(0)], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, ckv, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def mla_paged_latent_decode(
+    q_lat: jax.Array,         # (B, H, rank)
+    q_rope: jax.Array,        # (B, H, rope)
+    ckv_pages: jax.Array,     # (P, bs, rank) physical latent pages
+    kr_pages: jax.Array,      # (P, bs, rope)
+    block_tables: jax.Array,  # (B, nb) logical block -> physical page
+    valid_len: jax.Array,     # (B,)
+    *,
+    scale: float,
+    interpret: bool = True,
+) -> jax.Array:
+    """Absorbed-MLA latent decode over a PAGED compressed cache.
+
+    Same math as ``mla_latent_decode``, but the latent tiles are gathered
+    through the per-request block table: the scalar-prefetched table drives
+    the BlockSpec index maps, so each grid step streams exactly one ckv and
+    one kr page HBM->VMEM — the page arrays are separate operands (unlike
+    the dense kernel's host-side concat, which would copy the WHOLE pool
+    every call) and the rope/latent score halves are summed tile-locally.
+    Grid = (B, nb), logical-block axis innermost carrying the
+    online-softmax scratch. Table entries past the last block point at the
+    reserved null page 0 and are masked by ``valid_len``.
+    """
+    b, h, rank = q_lat.shape
+    rope = q_rope.shape[-1]
+    bs = ckv_pages.shape[1]
+    nb = block_tables.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # block table + valid lengths
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, h, rank), lambda bi, j, bt, vl: (bi, 0, 0)),
+            pl.BlockSpec((1, h, rope), lambda bi, j, bt, vl: (bi, 0, 0)),
+            pl.BlockSpec((1, bs, rank), lambda bi, j, bt, vl: (bt[bi, j], 0, 0)),
+            pl.BlockSpec((1, bs, rope), lambda bi, j, bt, vl: (bt[bi, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, rank), lambda bi, j, bt, vl: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, rank), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, block_size=bs),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, rank), q_lat.dtype),
+        interpret=interpret,
+    )(block_tables, valid_len, q_lat, q_rope, ckv_pages, kr_pages)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "block_l", "interpret"))
 def mla_latent_decode(
     q_lat: jax.Array,      # (B, H, rank)

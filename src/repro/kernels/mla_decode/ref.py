@@ -29,3 +29,21 @@ def mla_latent_decode_ref(
     p = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhl,blr->bhr", p, ckv.astype(jnp.float32))
     return ctx.astype(q_lat.dtype)
+
+
+def mla_paged_latent_decode_ref(
+    q_lat: jax.Array,         # (B, H, rank)
+    q_rope: jax.Array,        # (B, H, rope)
+    ckv_pages: jax.Array,     # (P, bs, rank)
+    kr_pages: jax.Array,      # (P, bs, rope)
+    block_tables: jax.Array,  # (B, nb)
+    valid_len: jax.Array,     # (B,)
+    scale: float,
+) -> jax.Array:
+    """Gather pages into the contiguous layout, defer to the dense oracle."""
+    b = q_lat.shape[0]
+    bs = ckv_pages.shape[1]
+    nb = block_tables.shape[1]
+    ckv = ckv_pages[block_tables].reshape(b, nb * bs, ckv_pages.shape[-1])
+    kr = kr_pages[block_tables].reshape(b, nb * bs, kr_pages.shape[-1])
+    return mla_latent_decode_ref(q_lat, q_rope, ckv, kr, valid_len, scale)

@@ -8,8 +8,8 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.common import clamp_block, largest_divisor_block, pad_to_multiple
 from repro.kernels.ssd.ssd import ssd_scan
 
 
@@ -26,16 +26,13 @@ def ssd_prefill(
     interpret: bool = True,
 ):
     bsz, s, h, p = x.shape
-    q_chunk = min(q_chunk, s) if s % min(q_chunk, s) == 0 else q_chunk
-    head_block = min(head_block, h)
-    while h % head_block:
-        head_block -= 1
-    pad = (-s) % q_chunk
-    if pad:
-        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
-        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
-        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    q_chunk = clamp_block(q_chunk, s)
+    head_block = largest_divisor_block(head_block, h)
+    # dt=0 rows are exact no-ops, so zero-padding the time axis is safe
+    x = pad_to_multiple(x, q_chunk, axis=1)
+    dt = pad_to_multiple(dt, q_chunk, axis=1)
+    b = pad_to_multiple(b, q_chunk, axis=1)
+    c = pad_to_multiple(c, q_chunk, axis=1)
     y, fs = ssd_scan(
         x, dt, a, b, c,
         q_chunk=q_chunk, head_block=head_block, interpret=interpret,

@@ -1,13 +1,21 @@
 """Model zoo: config schema, layers, attention paradigms, assembly."""
-from repro.models.config import ModelConfig, StageSpec, kv_cache_bytes_per_token
+from repro.models.config import (
+    ModelConfig,
+    StageSpec,
+    kv_cache_bytes_per_token,
+    recurrent_state_bytes,
+)
 from repro.models.model import (
     abstract_cache,
     abstract_params,
     decode_step,
+    decode_step_paged,
     forward,
     init_cache,
+    init_paged_cache,
     init_params,
     logits,
+    paged_layout,
     prefill,
 )
 
@@ -15,12 +23,16 @@ __all__ = [
     "ModelConfig",
     "StageSpec",
     "kv_cache_bytes_per_token",
+    "recurrent_state_bytes",
     "abstract_cache",
     "abstract_params",
     "decode_step",
+    "decode_step_paged",
     "forward",
     "init_cache",
+    "init_paged_cache",
     "init_params",
     "logits",
+    "paged_layout",
     "prefill",
 ]

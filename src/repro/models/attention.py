@@ -113,6 +113,35 @@ def self_attention_prefill(
     return out, cache
 
 
+def _paged_token_write(
+    pages: jax.Array,         # (P, bs, ...) physical pages; page 0 reserved/null
+    new: jax.Array,           # (B, 1, ...) the new token's row per request
+    block_tables: jax.Array,  # (B, nb) logical block -> physical page id
+    lengths: jax.Array,       # (B,) tokens already cached (write position)
+    active: jax.Array,        # (B,) bool; inactive slots write to the null page
+) -> jax.Array:
+    """Per-request cache write through the block table.
+
+    The dense path writes slot-private rows, so stale lengths on inactive
+    slots are harmless; with paging a stale table could point at a page
+    since reallocated to another request, so inactive writes are routed to
+    the reserved null page 0 instead.
+    """
+    bs = pages.shape[1]
+    nb = block_tables.shape[1]
+    blk = jnp.clip(lengths // bs, 0, nb - 1)
+    phys = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
+    phys = jnp.where(active, phys, 0)
+    return pages.at[phys, lengths % bs].set(new[:, 0].astype(pages.dtype))
+
+
+def _gather_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(P, bs, ...) pages + (B, nb) table -> contiguous (B, nb*bs, ...) view."""
+    b, nb = block_tables.shape
+    bs = pages.shape[1]
+    return pages[block_tables].reshape(b, nb * bs, *pages.shape[2:])
+
+
 def _write_at_lengths(buf: jax.Array, new: jax.Array, lengths: jax.Array) -> jax.Array:
     """Per-example cache write at ragged positions: buf (B,L,...), new (B,1,...).
 
@@ -127,6 +156,33 @@ def _write_at_lengths(buf: jax.Array, new: jax.Array, lengths: jax.Array) -> jax
     return jnp.where(mask, new.astype(buf.dtype), buf)
 
 
+def _decode_qkv(params, x, lengths, cfg):
+    """Shared decode-step projections: rope'd q and new-token k/v rows."""
+    positions = lengths[:, None]     # new token's position
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    return q, k_new, v_new
+
+
+def _decode_attend(params, q, k_buf, v_buf, lengths, cfg, is_global, out_dtype):
+    """Masked grouped attention of one query row over a contiguous buffer —
+    the buffer may be a dense slot row or a gathered page view; the mask is
+    on LOGICAL positions either way."""
+    l_max = k_buf.shape[1]
+    kpos = jnp.arange(l_max)[None, :]                       # (1, L)
+    valid = kpos <= lengths[:, None]                        # include new token
+    if not is_global and cfg.sliding_window > 0:
+        valid &= (lengths[:, None] - kpos) < cfg.sliding_window
+    mask = valid[:, None, None, None, :]                    # (B,1,1,1,L)
+
+    scores = _grouped_scores(q, k_buf.astype(out_dtype), _attn_scale(cfg), cfg.attn_softcap)
+    ctx = _attend(scores, v_buf.astype(out_dtype), mask, out_dtype)
+    return jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+
+
 def self_attention_decode(
     params: Dict,
     x: jax.Array,                    # (B, 1, d)
@@ -136,28 +192,39 @@ def self_attention_decode(
     *,
     is_global: bool,
 ) -> Tuple[jax.Array, Dict]:
-    b = x.shape[0]
-    positions = lengths[:, None]     # new token's position
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
-    k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
-    v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
-    q = apply_rope(q, positions, cfg.rope_theta)
-    k_new = apply_rope(k_new, positions, cfg.rope_theta)
-
+    q, k_new, v_new = _decode_qkv(params, x, lengths, cfg)
     k_buf = _write_at_lengths(cache["k"], k_new.astype(cache["k"].dtype), lengths)
     v_buf = _write_at_lengths(cache["v"], v_new.astype(cache["v"].dtype), lengths)
-
-    l_max = k_buf.shape[1]
-    kpos = jnp.arange(l_max)[None, :]                       # (1, L)
-    valid = kpos <= lengths[:, None]                        # include new token
-    if not is_global and cfg.sliding_window > 0:
-        valid &= (lengths[:, None] - kpos) < cfg.sliding_window
-    mask = valid[:, None, None, None, :]                    # (B,1,1,1,L)
-
-    scores = _grouped_scores(q, k_buf.astype(x.dtype), _attn_scale(cfg), cfg.attn_softcap)
-    ctx = _attend(scores, v_buf.astype(x.dtype), mask, x.dtype)
-    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+    out = _decode_attend(params, q, k_buf, v_buf, lengths, cfg, is_global, x.dtype)
     return out, {"k": k_buf, "v": v_buf}
+
+
+def self_attention_decode_paged(
+    params: Dict,
+    x: jax.Array,                    # (B, 1, d)
+    cache: Dict,                     # {"k": (P, bs, KV, hd), "v": ...} pages
+    block_tables: jax.Array,         # (B, nb)
+    lengths: jax.Array,              # (B,)
+    active: jax.Array,               # (B,) bool
+    cfg,
+    *,
+    is_global: bool,
+) -> Tuple[jax.Array, Dict]:
+    """Decode over the PAGED cache layout: write the new token through the
+    block table, gather the table's pages to a contiguous view, attend.
+
+    Same math as ``self_attention_decode`` — paging is pure layout — which
+    is what the paged==dense property tests pin down. (On TPU the gather+
+    attend is ``kernels.decode_attn.gqa_paged_decode_attention``, which
+    streams exactly the pages the table names.)
+    """
+    q, k_new, v_new = _decode_qkv(params, x, lengths, cfg)
+    k_pages = _paged_token_write(cache["k"], k_new, block_tables, lengths, active)
+    v_pages = _paged_token_write(cache["v"], v_new, block_tables, lengths, active)
+    k_buf = _gather_pages(k_pages, block_tables)
+    v_buf = _gather_pages(v_pages, block_tables)
+    out = _decode_attend(params, q, k_buf, v_buf, lengths, cfg, is_global, x.dtype)
+    return out, {"k": k_pages, "v": v_pages}
 
 
 # ----------------------------------------------------------------- cross-attn

@@ -98,6 +98,7 @@ class ModelConfig:
     # --- embeddings / io -------------------------------------------------------
     input_is_embeddings: bool = False    # audio/vlm frontends are stubs
     tie_embeddings: bool = True
+    eos_token_id: int = 0                # serving stops a request on this id
     n_media_tokens: int = 0              # vlm: encoder states per request
     embed_scale: bool = False            # gemma multiplies embeds by sqrt(d)
     # --- norm / numerics --------------------------------------------------------
@@ -260,4 +261,31 @@ def kv_cache_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
         elif kind in ("mla", "mla_moe"):
             total += (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * dtype_bytes
         # ssm / gdn / cross_attn: O(1) state, nothing per token
+    return total
+
+
+def recurrent_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2,
+                          mutable_only: bool = False) -> int:
+    """HBM bytes of O(1)-per-request state one decode step streams (one
+    pass). A step reads all of it but rewrites only the mutable part —
+    ``mutable_only=True`` excludes the read-only encoder (cross-attn)
+    cache, so a traffic meter bills reads and writes separately.
+
+    This is the SSM/GDN/cross-attn counterpart of
+    :func:`kv_cache_bytes_per_token` — fp32 recurrent state, bf16 conv and
+    encoder caches — so a traffic meter can be byte-accurate for the
+    architectures whose decode traffic is state, not KV (the paper's
+    compute-light DVFS class)."""
+    total = 0
+    for kind in cfg.block_kinds_flat():
+        if kind == "ssm":
+            d_inner = cfg.ssm_expand * cfg.d_model
+            p = d_inner // cfg.ssm_heads
+            conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            total += cfg.ssm_heads * p * cfg.ssm_state * 4          # fp32 SSM state
+            total += (cfg.ssm_conv_kernel - 1) * conv_dim * dtype_bytes
+        elif kind == "gdn":
+            total += cfg.gdn_heads * cfg.gdn_head_dim * cfg.gdn_head_dim * 4
+        elif kind == "cross_attn" and not mutable_only:
+            total += 2 * cfg.n_media_tokens * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
     return total

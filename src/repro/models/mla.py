@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.attention import NEG_INF, _write_at_lengths
+from repro.models.attention import NEG_INF, _gather_pages, _paged_token_write, _write_at_lengths
 from repro.models.flash import attention_prefill_auto
 from repro.models.layers import apply_rope, rmsnorm, init_rmsnorm
 
@@ -184,3 +184,38 @@ def mla_decode(
         params, q_nope, q_rope, ckv_buf.astype(x.dtype), kr_buf.astype(x.dtype), mask, cfg, x.dtype
     )
     return out, {"ckv": ckv_buf, "kr": kr_buf}
+
+
+def mla_decode_paged(
+    params: Dict,
+    x: jax.Array,                   # (B, 1, d)
+    cache: Dict,                    # {"ckv": (P, bs, rank), "kr": (P, bs, rope)}
+    block_tables: jax.Array,        # (B, nb)
+    lengths: jax.Array,             # (B,)
+    active: jax.Array,              # (B,) bool
+    cfg,
+    *,
+    absorb: bool,
+) -> Tuple[jax.Array, Dict]:
+    """Absorbed MLA decode over the PAGED latent cache: write the new
+    latent through the block table, gather the table's pages, attend. Same
+    math as ``mla_decode`` — and the compressed cache makes each page
+    ``(rank + rope) * bs`` bytes, the 3.6x traffic reduction the paged
+    traffic meter makes visible per block. TPU kernel counterpart:
+    ``kernels.mla_decode.mla_paged_fused_decode``."""
+    positions = lengths[:, None]
+    q_nope, q_rope = _queries(params, x, positions, cfg)
+    ckv_new, kr_new = _latents(params, x, positions, cfg)
+
+    ckv_pages = _paged_token_write(cache["ckv"], ckv_new, block_tables, lengths, active)
+    kr_pages = _paged_token_write(cache["kr"], kr_new, block_tables, lengths, active)
+    ckv_buf = _gather_pages(ckv_pages, block_tables)
+    kr_buf = _gather_pages(kr_pages, block_tables)
+
+    l_max = ckv_buf.shape[1]
+    mask = (jnp.arange(l_max)[None, :] <= lengths[:, None])[:, None, None, :]
+    attend = _attend_absorbed if absorb else _attend_naive
+    out = attend(
+        params, q_nope, q_rope, ckv_buf.astype(x.dtype), kr_buf.astype(x.dtype), mask, cfg, x.dtype
+    )
+    return out, {"ckv": ckv_pages, "kr": kr_pages}

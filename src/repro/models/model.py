@@ -6,9 +6,12 @@ Public API (all pure functions):
     abstract_params(cfg)                   -> ShapeDtypeStruct pytree
     init_cache(cfg, batch, max_len)        -> cache pytree (concrete zeros)
     abstract_cache(cfg, batch, max_len)    -> ShapeDtypeStruct pytree
+    init_paged_cache(cfg, batch, n_pages, block_size)  -> paged cache pytree
+    paged_layout(cfg)                      -> bool pytree (paged vs slot leaves)
     forward(params, cfg, tokens/embeds, enc_states=None)       # train: (B,S,d) final hidden
     prefill(params, cfg, tokens, cache, enc_states=None)       # -> (last_logits, cache, lengths)
     decode_step(params, cfg, token, cache, lengths, enc_states_cacheed)  # -> (logits, cache)
+    decode_step_paged(params, cfg, token, cache, lengths, active, block_tables)
 
 Depth is organised as ``cfg.stages``: each stage scans ``n_units`` copies of
 a short block tuple, with per-unit params (and caches) stacked on a leading
@@ -179,6 +182,59 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
     return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
 
 
+# -------------------------------------------------------------- paged cache
+# Block kinds whose cache grows per token and therefore lives in pages;
+# O(1)-state kinds (ssm/gdn) and the fixed encoder cache (cross_attn) stay
+# slot-indexed dense even in a paged cache.
+PAGED_KINDS = ("attn", "attn_global", "shared_attn", "mla", "mla_moe")
+
+
+def _block_paged_cache(kind: str, cfg: ModelConfig, batch: int, n_pages: int,
+                       block_size: int):
+    cd = _cdtype(cfg)
+    if kind in ("attn", "attn_global", "shared_attn"):
+        shape = (n_pages, block_size, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, cd), "v": jnp.zeros(shape, cd)}
+    if kind in ("mla", "mla_moe"):
+        return {
+            "ckv": jnp.zeros((n_pages, block_size, cfg.kv_lora_rank), cd),
+            "kr": jnp.zeros((n_pages, block_size, cfg.qk_rope_head_dim), cd),
+        }
+    return _block_cache(kind, cfg, batch, block_size)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int, block_size: int) -> Dict:
+    """Paged decode cache: per-token caches live in ``n_pages`` physical
+    pages of ``block_size`` tokens (page 0 reserved as the null/trash page),
+    shared by all requests through per-request block tables; O(1) state
+    stays a dense ``batch``-row array. Same pytree structure as
+    ``init_cache``, so the scanned stages are oblivious to the layout."""
+    stages = []
+    for stage in cfg.stages:
+        unit = {
+            f"b{i}": _block_paged_cache(kind, cfg, batch, n_pages, block_size)
+            for i, kind in enumerate(stage.unit)
+        }
+        stages.append(
+            jax.tree.map(lambda a, n=stage.n_units: jnp.zeros((n,) + a.shape, a.dtype), unit)
+        )
+    return {"stages": stages}
+
+
+def paged_layout(cfg: ModelConfig) -> Dict:
+    """Boolean pytree matching the cache structure: True leaves are paged
+    (block-table indexed), False leaves are slot indexed. The serving layer
+    maps over (cache, layout) to scatter migrations leaf-appropriately."""
+    stages = []
+    for stage in cfg.stages:
+        unit = {}
+        for i, kind in enumerate(stage.unit):
+            struct = jax.eval_shape(lambda k=kind: _block_cache(k, cfg, 1, 1))
+            unit[f"b{i}"] = jax.tree.map(lambda _, k=kind: k in PAGED_KINDS, struct)
+        stages.append(unit)
+    return {"stages": stages}
+
+
 # ------------------------------------------------------------------ forward
 def _block_apply(
     kind: str,
@@ -190,6 +246,8 @@ def _block_apply(
     lengths: Optional[jax.Array],
     shared_params: Optional[Dict],
     enc_states: Optional[jax.Array],
+    block_tables: Optional[jax.Array] = None,   # paged decode only
+    active: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     if kind == "shared_attn":
         bp = shared_params
@@ -200,7 +258,12 @@ def _block_apply(
     if kind_eff in ("attn", "attn_global"):
         is_global = kind_eff == "attn_global"
         h = rmsnorm(bp["norm1"], x, cfg.rms_eps)
-        if mode == "decode":
+        if mode == "decode" and block_tables is not None:
+            a_out, new_cache = attn.self_attention_decode_paged(
+                bp["attn"], h, cache, block_tables, lengths, active, cfg,
+                is_global=is_global,
+            )
+        elif mode == "decode":
             a_out, new_cache = attn.self_attention_decode(
                 bp["attn"], h, cache, lengths, cfg, is_global=is_global
             )
@@ -236,7 +299,11 @@ def _block_apply(
 
     if kind_eff in ("mla", "mla_moe"):
         h = rmsnorm(bp["norm1"], x, cfg.rms_eps)
-        if mode == "decode":
+        if mode == "decode" and block_tables is not None:
+            a_out, new_cache = mla_mod.mla_decode_paged(
+                bp["mla"], h, cache, block_tables, lengths, active, cfg, absorb=True
+            )
+        elif mode == "decode":
             a_out, new_cache = mla_mod.mla_decode(
                 bp["mla"], h, cache, lengths, cfg, absorb=True
             )
@@ -290,6 +357,8 @@ def _run_stages(
     lengths: Optional[jax.Array],
     enc_states: Optional[jax.Array],
     remat: bool,
+    block_tables: Optional[jax.Array] = None,
+    active: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     shared = params.get("shared_block")
     new_stage_caches = []
@@ -303,7 +372,8 @@ def _run_stages(
             for i, kind in enumerate(_stage.unit):
                 bc = uc[f"b{i}"] if uc is not None else None
                 carry_x, nbc = _block_apply(
-                    kind, up[f"b{i}"], carry_x, cfg, mode, bc, lengths, shared, enc_states
+                    kind, up[f"b{i}"], carry_x, cfg, mode, bc, lengths, shared,
+                    enc_states, block_tables, active,
                 )
                 new_uc[f"b{i}"] = nbc if nbc is not None else {}
             # keep activations batch-sharded across unit boundaries (no-op
@@ -397,5 +467,32 @@ def decode_step(
     else:
         x = _embed_inputs(params, cfg, token[:, None])
     x, new_cache = _run_stages(params, cfg, x, "decode", cache, lengths, enc_states, False)
+    x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    return logits(params, cfg, x)[:, 0], new_cache, lengths + 1
+
+
+def decode_step_paged(
+    params: Dict,
+    cfg: ModelConfig,
+    token: jax.Array,                 # (B,) int32 or (B, 1, d) embeddings
+    cache: Dict,                      # init_paged_cache layout
+    lengths: jax.Array,               # (B,) tokens already cached
+    active: jax.Array,                # (B,) bool — live slots
+    block_tables: jax.Array,          # (B, nb) logical block -> physical page
+    *,
+    enc_states: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict, jax.Array]:
+    """One decode step over the PAGED cache: per-token caches are read and
+    written through the block table; O(1) state stays slot indexed. Paging
+    is pure layout, so logits are bit-identical to ``decode_step`` on the
+    equivalent dense cache."""
+    if cfg.input_is_embeddings:
+        x = token.astype(_cdtype(cfg))
+    else:
+        x = _embed_inputs(params, cfg, token[:, None])
+    x, new_cache = _run_stages(
+        params, cfg, x, "decode", cache, lengths, enc_states, False,
+        block_tables=block_tables, active=active,
+    )
     x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
     return logits(params, cfg, x)[:, 0], new_cache, lengths + 1

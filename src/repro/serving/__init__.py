@@ -1,8 +1,10 @@
-"""Serving substrate: phase pools, the single-pool engine, and the
-phase-disaggregated cluster with its energy-aware clock controller."""
+"""Serving substrate: phase pools (dense or paged continuous batching), the
+single-pool engine, and the phase-disaggregated cluster with its
+energy-aware clock controller."""
 from repro.serving.cluster import Cluster, Scheduler
 from repro.serving.controller import ClockController, Transition
 from repro.serving.engine import EOS, PhaseStats, Request, ServingEngine
+from repro.serving.paged_cache import NULL_PAGE, BlockAllocator, TrafficCounter
 from repro.serving.pool import Pool
 
 __all__ = [
@@ -15,4 +17,7 @@ __all__ = [
     "Scheduler",
     "ClockController",
     "Transition",
+    "BlockAllocator",
+    "TrafficCounter",
+    "NULL_PAGE",
 ]

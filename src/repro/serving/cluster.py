@@ -23,6 +23,13 @@ pool's lever is re-resolved from its live occupancy/context regime, its
 and per-request prefill/decode joules accumulate at the pool's current
 energy/token. With no controller the cluster still serves — it just runs
 unmetered, like the seed engine did.
+
+With ``paged=True`` the decode pool runs the paged cache (continuous
+batching over a block allocator): admission asks ``can_admit`` — blocks,
+not just slots — the migration scatter becomes a block-table handoff
+(copy-on-migrate into freshly allocated pages), preempted requests come
+back through the queue head, and decode joules derive from the pool's
+block-level ``TrafficCounter`` instead of the shape-based estimate.
 """
 from __future__ import annotations
 
@@ -67,16 +74,27 @@ class Scheduler:
         if not waiting:
             self._credit = 0.0
             return []
-        if decode_pool.has_free_slot():
+        # fail fast on an unservable head: a prompt that can never fit (seq
+        # length, or a paged budget smaller than the request alone) would
+        # otherwise keep can_admit False forever and livelock the queue
+        # without ever reaching the in-loop validate
+        try:
+            decode_pool.validate(waiting[0])
+        except ValueError:
+            waiting.pop(0)
+            raise
+        if decode_pool.can_admit(waiting[0]):
             # accrue only while admission is possible, capped at
             # max(chunk, head need) — a full decode pool must not bank
-            # credit that later releases one giant prefill burst
+            # credit that later releases one giant prefill burst.
+            # can_admit is the continuous-batching gate: on a paged pool it
+            # asks the block allocator, not a fixed slot count.
             self._credit = min(
                 self._credit + self.chunk_tokens,
                 max(float(self.chunk_tokens), float(len(waiting[0].prompt))),
             )
         admitted: List[Request] = []
-        while waiting and decode_pool.has_free_slot():
+        while waiting and decode_pool.can_admit(waiting[0]):
             req = waiting[0]
             try:
                 decode_pool.validate(req)
@@ -113,6 +131,9 @@ class Cluster:
         rng_seed: int = 0,
         clock: Callable[[], float] = time.perf_counter,
         meter_interval_s: float = 0.050,
+        paged: bool = False,
+        kv_block_size: int = 16,
+        kv_blocks: Optional[int] = None,
     ):
         self.cfg = cfg
         self.prefill_pool = Pool(
@@ -120,10 +141,13 @@ class Cluster:
             max_seq_len=max_seq_len, rng_seed=rng_seed, clock=clock,
             meter_interval_s=meter_interval_s,
         )
+        # only the decode pool pages its cache: prefill is batch-1 scratch
+        # whose row is handed off (copy-on-migrate) at admission
         self.decode_pool = Pool(
             cfg, params, role="decode", max_batch=decode_batch,
             max_seq_len=max_seq_len, rng_seed=rng_seed, clock=clock,
             meter_interval_s=meter_interval_s,
+            paged=paged, kv_block_size=kv_block_size, kv_blocks=kv_blocks,
         )
         self.controller = controller
         self.scheduler = Scheduler(prefill_chunk_tokens)
@@ -152,7 +176,13 @@ class Cluster:
             # admission changed decode occupancy: re-resolve so this step's
             # tokens are priced at the true post-admission operating point
             self.controller.tick(self.pools(), self._step_no)
-        return self.decode_pool.decode_once()
+        finished = self.decode_pool.decode_once()
+        # preempted requests go back to the queue head: they are the oldest
+        # work in flight, and FIFO admission re-prefills them first
+        evicted = self.decode_pool.take_evicted()
+        if evicted:
+            self.waiting[:0] = evicted
+        return finished
 
     def busy(self) -> bool:
         return bool(self.waiting) or self.decode_pool.occupancy() > 0

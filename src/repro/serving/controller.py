@@ -160,6 +160,9 @@ class ClockController:
                     )
                 )
             pool.idle_power_w = self.emodel.spec.p_idle
+            # paged pools derive decode joules from measured block traffic:
+            # give them the spec's achievable HBM bandwidth as denominator
+            pool.hbm_bw_eff = self.emodel.hbm_bw_eff
             # a colocated pool (role "mixed") runs both phases at ONE lever
             # — the compromise disaggregation removes. Price its prefill
             # tokens at the prefill workload resolved under that same lever.

@@ -38,6 +38,9 @@ class ServingEngine:
         rng_seed: int = 0,
         clock: Callable[[], float] = time.perf_counter,
         controller: Optional[ClockController] = None,
+        paged: bool = False,
+        kv_block_size: int = 16,
+        kv_blocks: Optional[int] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -49,6 +52,7 @@ class ServingEngine:
         self.pool = Pool(
             cfg, params, role="mixed", max_batch=max_batch,
             max_seq_len=max_seq_len, rng_seed=rng_seed, clock=clock,
+            paged=paged, kv_block_size=kv_block_size, kv_blocks=kv_blocks,
         )
         self.controller = controller
         self.waiting: List[Request] = []
@@ -73,9 +77,15 @@ class ServingEngine:
 
     def _admit(self) -> int:
         admitted = 0
-        for _ in self.pool.free_slots():
-            if not self.waiting:
-                break
+        if self.waiting:
+            # fail fast on an unservable head (see Scheduler.tick): a paged
+            # budget smaller than the request alone would never admit
+            try:
+                self.pool.validate(self.waiting[0])
+            except ValueError:
+                self.waiting.pop(0)
+                raise
+        while self.waiting and self.pool.can_admit(self.waiting[0]):
             req = self.waiting.pop(0)
             self.pool.validate(req)
             first, cache1 = self.pool.prefill_request(req)
@@ -92,7 +102,11 @@ class ServingEngine:
         if self.controller is not None and admitted:
             # re-resolve at the true post-admission occupancy (see Cluster.step)
             self.controller.tick({"mixed": self.pool}, self._step_no)
-        return self.pool.decode_once()
+        finished = self.pool.decode_once()
+        evicted = self.pool.take_evicted()
+        if evicted:
+            self.waiting[:0] = evicted
+        return finished
 
     def run_to_completion(self, max_steps: int = 100000) -> List[Request]:
         done: List[Request] = []

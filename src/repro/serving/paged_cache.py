@@ -1,0 +1,119 @@
+"""Paged KV/state cache substrate: block allocator + block tables + traffic.
+
+The dense slot pool preallocates one ``(B, max_len, ...)`` cache row per
+slot — reserving exactly the resource the paper says decode is bound by
+(HBM) for contexts that mostly never materialise. Here the per-token caches
+live in fixed-size **token blocks** shared by all requests:
+
+* ``BlockAllocator`` — owns the physical page id space. Page ids start at 1;
+  **page 0 is reserved as the null page**: unallocated block-table entries
+  point at it, and the jitted decode step routes inactive slots' writes to
+  it, so a stale table can never corrupt a page that has been reallocated.
+* block tables — per-request ``(nb,)`` int32 rows mapping logical block
+  ``j`` (tokens ``[j*bs, (j+1)*bs)``) to a physical page. The serving pool
+  stores them per slot and hands the stacked ``(B, nb)`` array to the jitted
+  paged decode step; migration between pools is a block-table handoff plus
+  one jitted page scatter (copy-on-migrate).
+* ``TrafficCounter`` (re-exported from ``repro.core.metering``) — the
+  byte-accurate ledger the energy layer consumes: reads stream whole blocks
+  (a partially-filled tail block still moves ``block_bytes``), so counting
+  blocks touched per step IS counting bytes moved.
+
+The allocator is deliberately host-side Python: allocation decisions are
+control flow (admission, growth, preemption), only the resulting tables
+enter jit.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.metering import TrafficCounter
+
+__all__ = ["BlockAllocator", "TrafficCounter", "NULL_PAGE"]
+
+NULL_PAGE = 0
+
+
+class BlockAllocator:
+    """Fixed-size token-block allocator with ownership tracking.
+
+    Ownership (block id -> owner key) turns silent corruption into loud
+    errors: allocating a block twice, freeing a block through the wrong
+    request, or freeing twice all raise. ``defrag`` compacts live blocks to
+    the lowest ids and returns the old->new mapping so the cache arrays and
+    block tables can be remapped in one gather.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1:
+            raise ValueError("num_blocks must be >= 1")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # pop() from the end hands out ascending ids 1, 2, ...
+        self._free = list(range(num_blocks, 0, -1))
+        self._owner: Dict[int, int] = {}
+
+    # ------------------------------------------------------------- capacity
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return len(self._owner)
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.block_size)
+
+    def can_alloc(self, n_blocks: int) -> bool:
+        return n_blocks <= len(self._free)
+
+    # ------------------------------------------------------------ alloc/free
+    def alloc(self, n_blocks: int, owner: int) -> List[int]:
+        if not self.can_alloc(n_blocks):
+            raise MemoryError(
+                f"requested {n_blocks} blocks, {len(self._free)} free "
+                f"of {self.num_blocks}"
+            )
+        out = [self._free.pop() for _ in range(n_blocks)]
+        for b in out:
+            self._owner[b] = owner
+        return out
+
+    def alloc_one(self, owner: int) -> Optional[int]:
+        """One block or None — the grow-by-one path never raises; the pool
+        turns None into a preemption decision."""
+        if not self._free:
+            return None
+        b = self._free.pop()
+        self._owner[b] = owner
+        return b
+
+    def free(self, blocks: List[int], owner: int):
+        for b in blocks:
+            if self._owner.get(b) is None:
+                raise ValueError(f"double free of block {b}")
+            if self._owner[b] != owner:
+                raise ValueError(
+                    f"block {b} owned by {self._owner[b]}, freed by {owner}"
+                )
+            del self._owner[b]
+            self._free.append(b)
+
+    def owned_by(self, owner: int) -> List[int]:
+        return sorted(b for b, o in self._owner.items() if o == owner)
+
+    # --------------------------------------------------------------- defrag
+    def defrag(self) -> Dict[int, int]:
+        """Compact live blocks to ids 1..used (admission order of ids, i.e.
+        ascending old id). Returns {old_id: new_id} for every live block;
+        callers must remap their block tables AND physically move the pages
+        (``Pool.defrag`` does both in one gather)."""
+        live = sorted(self._owner)
+        mapping = {old: new for new, old in enumerate(live, start=1)}
+        self._owner = {mapping[old]: o for old, o in self._owner.items()}
+        used = len(live)
+        self._free = list(range(self.num_blocks, used, -1))
+        return mapping

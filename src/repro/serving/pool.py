@@ -1,8 +1,8 @@
 """Phase pool: the slot/cache machinery one serving phase runs on.
 
 A ``Pool`` owns the JAX-side state the old monolithic engine carried —
-static slot pool, stacked KV/state cache, jitted prefill/decode/scatter —
-plus the energy-side state the disaggregated cluster needs:
+slot pool, KV/state cache, jitted prefill/decode/scatter — plus the
+energy-side state the disaggregated cluster needs:
 
 * ``PhaseStats`` with per-phase joules and the configured-vs-actual clock
   of the lever currently applied to this pool (the paper's Table 1 gap);
@@ -12,11 +12,28 @@ plus the energy-side state the disaggregated cluster needs:
 * an ``OperatingPoint`` slot written by a ClockController — the pool itself
   never picks clocks, it only accounts at whatever point it was put.
 
+Two cache layouts:
+
+* **dense** (the seed layout) — one stacked ``(B, max_len, ...)`` row per
+  slot, preallocated. Admission is slot-bound.
+* **paged** (``paged=True``) — per-token caches live in fixed-size token
+  blocks (``repro.serving.paged_cache.BlockAllocator``) shared by all
+  slots through per-slot block tables; O(1) recurrent state stays slot
+  indexed. Admission is *block*-bound (continuous batching: admit whenever
+  blocks are free), growth allocates a block at a time, and exhaustion
+  preempts the youngest slot (recompute-style eviction: the request is
+  reset and requeued). Every block touched per decode step increments the
+  pool's ``TrafficCounter``, and when a controller has attached an
+  operating point, per-request decode joules are derived from those
+  measured bytes (``repro.core.energy.joules_from_hbm_traffic``) instead
+  of the shape-based energy/token estimate.
+
 JAX-shape discipline is unchanged from the seed engine: decode runs one
 jitted step over ALL slots (static batch, per-slot lengths, active mask);
 prefill runs batch-1 with prompt lengths padded to power-of-2 buckets, and
 the filled cache row is scattered into a slot — in the cluster that scatter
-IS the prefill->decode migration.
+IS the prefill->decode migration (for a paged pool: a block-table handoff
+plus one jitted page scatter, the copy-on-migrate).
 """
 from __future__ import annotations
 
@@ -29,10 +46,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dvfs import OperatingPoint
+from repro.core.energy import joules_from_hbm_traffic
 from repro.core.metering import GaugeSource, PowerSampler
-from repro.models import decode_step, init_cache, prefill
+from repro.core.workload import weight_stream_bytes
+from repro.models import (
+    decode_step,
+    decode_step_paged,
+    init_cache,
+    init_paged_cache,
+    kv_cache_bytes_per_token,
+    paged_layout,
+    prefill,
+    recurrent_state_bytes,
+)
 from repro.models.config import ModelConfig
+from repro.serving.paged_cache import NULL_PAGE, BlockAllocator, TrafficCounter
 
+# Back-compat default: seed code stopped on token id 0. The real stop id now
+# comes from ``ModelConfig.eos_token_id`` (per-request override on Request).
 EOS = 0
 
 
@@ -42,17 +73,25 @@ class Request:
     prompt: np.ndarray                     # (L,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+    eos_token_id: Optional[int] = None     # None -> the pool's ModelConfig id
     # filled by the pool/scheduler
     output: List[int] = dataclasses.field(default_factory=list)
     prefill_s: float = 0.0
     decode_s: float = 0.0
     prefill_j: float = 0.0                 # modelled joules at the pool's op
     decode_j: float = 0.0
+    decode_read_bytes: int = 0             # paged pools: measured HBM traffic
+    decode_write_bytes: int = 0
+    preemptions: int = 0                   # times evicted + restarted
     done: bool = False
 
     @property
     def energy_j(self) -> float:
         return self.prefill_j + self.decode_j
+
+    @property
+    def decode_bytes(self) -> int:
+        return self.decode_read_bytes + self.decode_write_bytes
 
 
 @dataclasses.dataclass
@@ -66,6 +105,9 @@ class PhaseStats:
     # energy attribution at the pool's operating point (0 when unmetered)
     prefill_j: float = 0.0
     decode_j: float = 0.0
+    # block-level HBM traffic behind decode_j (0 on dense/unmetered pools)
+    decode_read_bytes: int = 0
+    decode_write_bytes: int = 0
     # lever state last applied to the pool that produced these stats
     configured_clock_mhz: float = 0.0
     actual_clock_mhz: float = 0.0
@@ -77,11 +119,14 @@ class PhaseStats:
         self.prefill_calls += 1
         self.prefill_j += joules
 
-    def merge_decode(self, tokens: int, secs: float, joules: float = 0.0):
+    def merge_decode(self, tokens: int, secs: float, joules: float = 0.0,
+                     read_bytes: int = 0, write_bytes: int = 0):
         self.decode_tokens += tokens
         self.decode_s += secs
         self.decode_steps += 1
         self.decode_j += joules
+        self.decode_read_bytes += read_bytes
+        self.decode_write_bytes += write_bytes
 
     def note_operating_point(self, op: OperatingPoint):
         self.actual_clock_mhz = float(op.actual_clock_mhz)
@@ -99,6 +144,10 @@ class PhaseStats:
     def energy_j(self) -> float:
         return self.prefill_j + self.decode_j
 
+    @property
+    def decode_bytes(self) -> int:
+        return self.decode_read_bytes + self.decode_write_bytes
+
     def merged_with(self, other: "PhaseStats") -> "PhaseStats":
         """Fieldwise token/time/energy sum; clock fields keep ``self``'s."""
         return PhaseStats(
@@ -110,6 +159,8 @@ class PhaseStats:
             decode_steps=self.decode_steps + other.decode_steps,
             prefill_j=self.prefill_j + other.prefill_j,
             decode_j=self.decode_j + other.decode_j,
+            decode_read_bytes=self.decode_read_bytes + other.decode_read_bytes,
+            decode_write_bytes=self.decode_write_bytes + other.decode_write_bytes,
             configured_clock_mhz=self.configured_clock_mhz,
             actual_clock_mhz=self.actual_clock_mhz,
             lever_engaged=self.lever_engaged,
@@ -137,6 +188,9 @@ class Pool:
         rng_seed: int = 0,
         clock: Callable[[], float] = time.perf_counter,
         meter_interval_s: float = 0.050,
+        paged: bool = False,
+        kv_block_size: int = 16,
+        kv_blocks: Optional[int] = None,   # default: dense-equivalent budget
     ):
         self.cfg = cfg
         self.params = params
@@ -145,6 +199,7 @@ class Pool:
         self.max_seq_len = max_seq_len
         self.clock = clock
         self.stats = PhaseStats()
+        self.eos_token_id = cfg.eos_token_id
 
         # energy side: operating point is written by a ClockController; the
         # gauge feeds this pool's sampler so the metering stack sees the
@@ -153,6 +208,8 @@ class Pool:
         self.op: Optional[OperatingPoint] = None
         self.prefill_op: Optional[OperatingPoint] = None
         self.idle_power_w: float = 0.0
+        self.hbm_bw_eff: float = 0.0       # set by the controller; enables
+                                           # traffic-derived decode joules
         self.gauge = GaugeSource(0.0)
         self.sampler = PowerSampler(self.gauge, interval_s=meter_interval_s)
         self._in_phase_call = False
@@ -165,11 +222,43 @@ class Pool:
         self.lengths = None
         self.cur_token = None
         self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.peak_occupancy = 0
         self._key = jax.random.PRNGKey(rng_seed)
+
+        # paged-cache side: allocator + per-slot block tables (host side;
+        # only the stacked (B, nb) table array enters jit)
+        self.paged = paged
+        self.kv_block_size = kv_block_size
+        self.allocator: Optional[BlockAllocator] = None
+        self.traffic = TrafficCounter()
+        self.evicted: List[Request] = []
+        if paged:
+            if max_seq_len % kv_block_size:
+                raise ValueError(
+                    f"max_seq_len {max_seq_len} not a multiple of "
+                    f"kv_block_size {kv_block_size}"
+                )
+            n_blocks = kv_blocks if kv_blocks is not None else (
+                max_batch * max_seq_len // kv_block_size
+            )
+            self.allocator = BlockAllocator(n_blocks, kv_block_size)
+            nb_per_slot = max_seq_len // kv_block_size
+            self.block_tables = np.zeros((max_batch, nb_per_slot), np.int32)
+            self._layout = paged_layout(cfg)
+            # byte-accuracy constants (per token / per request / per step)
+            self._kv_token_bytes = kv_cache_bytes_per_token(cfg)
+            self._state_read_bytes = recurrent_state_bytes(cfg)
+            self._state_write_bytes = recurrent_state_bytes(cfg, mutable_only=True)
+            self._weight_bytes = weight_stream_bytes(cfg)
+        self._host_lengths = np.zeros(max_batch, np.int64)
+        self._admit_seq = np.zeros(max_batch, np.int64)
+        self._admit_counter = 0
 
         self._jit_prefill = jax.jit(self._prefill_impl, static_argnames=("bucket",))
         self._jit_decode = jax.jit(self._decode_impl)
+        self._jit_decode_paged = jax.jit(self._decode_paged_impl)
         self._jit_scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
+        self._jit_scatter_paged = jax.jit(self._scatter_paged_impl, donate_argnums=(0,))
 
     # ------------------------------------------------------------- internals
     def _prefill_impl(self, params, tokens, true_len, bucket):
@@ -187,13 +276,42 @@ class Pool:
             small_cache,
         )
 
-    def _decode_impl(self, params, tokens, cache, lengths, active, key, temperature=0.0):
-        logits, new_cache, new_lengths = decode_step(params, self.cfg, tokens, cache, lengths)
+    def _scatter_paged_impl(self, big_cache, small_cache, page_map, slot):
+        """Copy-on-migrate: blocked rows of the batch-1 prefill cache go to
+        the pages ``page_map`` names (unused logical blocks map to the null
+        page, which absorbs the garbage rows); slot-layout state leaves
+        scatter into the slot row like the dense path."""
+        nb = self.block_tables.shape[1]
+        bs = self.kv_block_size
+
+        def scat(big, small, is_paged):
+            if is_paged:
+                rows = small[:, 0]                                  # (n_units, L_max, ...)
+                blocks = rows.reshape(rows.shape[0], nb, bs, *rows.shape[2:])
+                return big.at[:, page_map].set(blocks.astype(big.dtype))
+            return jax.lax.dynamic_update_slice_in_dim(big, small, slot, axis=1)
+
+        return jax.tree.map(scat, big_cache, small_cache, self._layout)
+
+    @staticmethod
+    def _sample(logits, key, temperature):
         if temperature > 0.0:
             gumbel = -jnp.log(-jnp.log(jax.random.uniform(key, logits.shape) + 1e-9) + 1e-9)
-            next_tok = jnp.argmax(logits / temperature + gumbel, axis=-1).astype(jnp.int32)
-        else:
-            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return jnp.argmax(logits / temperature + gumbel, axis=-1).astype(jnp.int32)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _decode_impl(self, params, tokens, cache, lengths, active, key, temperature=0.0):
+        logits, new_cache, new_lengths = decode_step(params, self.cfg, tokens, cache, lengths)
+        next_tok = self._sample(logits, key, temperature)
+        new_lengths = jnp.where(active, new_lengths, lengths)
+        return next_tok, new_cache, new_lengths
+
+    def _decode_paged_impl(self, params, tokens, cache, lengths, active, tables, key,
+                           temperature=0.0):
+        logits, new_cache, new_lengths = decode_step_paged(
+            params, self.cfg, tokens, cache, lengths, active, tables
+        )
+        next_tok = self._sample(logits, key, temperature)
         new_lengths = jnp.where(active, new_lengths, lengths)
         return next_tok, new_cache, new_lengths
 
@@ -252,6 +370,17 @@ class Pool:
     def has_free_slot(self) -> bool:
         return any(r is None for r in self.slot_req)
 
+    def can_admit(self, req: Request) -> bool:
+        """Admission test: a slot AND (paged) blocks for prompt + first
+        token. Growth past that is served by alloc-or-preempt, so this is
+        the continuous-batching gate: admit whenever blocks are free."""
+        if not self.has_free_slot():
+            return False
+        if not self.paged:
+            return True
+        need = self.allocator.blocks_for_tokens(len(req.prompt) + 1)
+        return self.allocator.can_alloc(need)
+
     def occupancy(self) -> int:
         return sum(r is not None for r in self.slot_req)
 
@@ -264,7 +393,14 @@ class Pool:
 
     def _ensure_decode_state(self):
         if self.cache is None:
-            self.cache = init_cache(self.cfg, self.max_batch, self.max_seq_len)
+            if self.paged:
+                self.cache = init_paged_cache(
+                    self.cfg, self.max_batch,
+                    self.allocator.num_blocks + 1,   # + the null page
+                    self.kv_block_size,
+                )
+            else:
+                self.cache = init_cache(self.cfg, self.max_batch, self.max_seq_len)
             self.lengths = jnp.zeros((self.max_batch,), jnp.int32)
             self.cur_token = jnp.zeros((self.max_batch,), jnp.int32)
 
@@ -278,6 +414,71 @@ class Pool:
                 f"request {req.uid}: prompt {l} + max_new {req.max_new_tokens} "
                 f"exceeds engine max_seq_len {self.max_seq_len}"
             )
+        if self.paged:
+            need = self.allocator.blocks_for_tokens(l + req.max_new_tokens)
+            if need > self.allocator.num_blocks:
+                raise ValueError(
+                    f"request {req.uid}: needs {need} cache blocks, pool has "
+                    f"{self.allocator.num_blocks} — unservable even alone"
+                )
+
+    # ------------------------------------------------------- paged plumbing
+    def _slot_blocks(self, slot: int) -> List[int]:
+        row = self.block_tables[slot]
+        return [int(b) for b in row[row != NULL_PAGE]]
+
+    def _evict(self, slot: int):
+        """Preempt-by-eviction (recompute style): free the slot's blocks,
+        reset the request, park it on ``self.evicted`` for the scheduler to
+        requeue. Greedy decoding makes the recompute token-identical."""
+        req = self.slot_req[slot]
+        self.allocator.free(self._slot_blocks(slot), owner=req.uid)
+        self.block_tables[slot] = NULL_PAGE
+        self.slot_req[slot] = None
+        self._host_lengths[slot] = 0
+        req.output = []
+        req.preemptions += 1
+        self.evicted.append(req)
+        self._refresh_gauge()
+
+    def take_evicted(self) -> List[Request]:
+        out, self.evicted = self.evicted, []
+        return out
+
+    def _youngest_active_slot(self) -> Optional[int]:
+        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not live:
+            return None
+        return max(live, key=lambda i: self._admit_seq[i])
+
+    def _grow_tables(self):
+        """Allocate the next block for every slot whose write position has
+        crossed a block boundary; preempt the youngest slot on exhaustion.
+        Oldest-admitted slots grow first, so under contention the pool
+        drains FIFO-ish instead of livelocking."""
+        order = sorted(
+            (i for i, r in enumerate(self.slot_req) if r is not None),
+            key=lambda i: self._admit_seq[i],
+        )
+        bs = self.kv_block_size
+        for slot in order:
+            if self.slot_req[slot] is None:      # evicted by an older slot
+                continue
+            ln = int(self._host_lengths[slot])
+            if ln % bs != 0:
+                continue
+            want = ln // bs
+            if want < len(self._slot_blocks(slot)):
+                continue
+            while True:
+                blk = self.allocator.alloc_one(owner=self.slot_req[slot].uid)
+                if blk is not None:
+                    self.block_tables[slot, want] = blk
+                    break
+                victim = self._youngest_active_slot()
+                self._evict(victim)
+                if victim == slot:
+                    break                         # evicted ourselves; requeued
 
     # ------------------------------------------------------------ phase work
     def prefill_request(self, req: Request) -> Tuple[int, Any]:
@@ -310,22 +511,53 @@ class Pool:
         return first, cache1
 
     def place(self, req: Request, cache1: Any, first_token: int, length: int) -> int:
-        """Scatter a filled batch-1 cache row into a free slot (migration)."""
+        """Scatter a filled batch-1 cache row into a free slot (migration).
+
+        Paged pools allocate the request's block table first and scatter by
+        page (copy-on-migrate); the handoff the decode step sees is purely
+        the table row."""
         free = self.free_slots()
         if not free:
-            raise RuntimeError("place() on a full pool — check has_free_slot() first")
+            raise RuntimeError("place() on a full pool — check can_admit() first")
         self._ensure_decode_state()
         slot = free[0]
-        self.cache = self._jit_scatter(self.cache, cache1, slot)
+        if self.paged:
+            need = self.allocator.blocks_for_tokens(length + 1)
+            blocks = self.allocator.alloc(need, owner=req.uid)
+            page_map = np.full(self.block_tables.shape[1], NULL_PAGE, np.int32)
+            page_map[:need] = blocks
+            self.block_tables[slot] = page_map
+            self.cache = self._jit_scatter_paged(
+                self.cache, cache1, jnp.asarray(page_map), slot
+            )
+            # copy-on-migrate moves `need` whole blocks of KV into the pool
+            self.traffic.count_writes(
+                need, need * self.kv_block_size * self._kv_token_bytes
+                + self._state_write_bytes,
+            )
+        else:
+            self.cache = self._jit_scatter(self.cache, cache1, slot)
         self.lengths = self.lengths.at[slot].set(length)
         self.cur_token = self.cur_token.at[slot].set(first_token)
+        self._host_lengths[slot] = length
+        self._admit_counter += 1
+        self._admit_seq[slot] = self._admit_counter
         req.output.append(first_token)
         self.slot_req[slot] = req
+        self.peak_occupancy = max(self.peak_occupancy, self.occupancy())
         self._refresh_gauge()
         return slot
 
+    def _req_eos(self, req: Request) -> int:
+        return self.eos_token_id if req.eos_token_id is None else req.eos_token_id
+
     def decode_once(self) -> List[Request]:
-        """One jitted decode step over all slots; returns finished requests."""
+        """One jitted decode step over all slots; returns finished requests.
+
+        Paged pools grow/evict block tables first, then account the step's
+        traffic block-accurately and derive decode joules from it."""
+        if self.paged and any(r is not None for r in self.slot_req):
+            self._grow_tables()
         active = self.active_mask()
         finished: List[Request] = []
         if not active.any():
@@ -333,28 +565,94 @@ class Pool:
         self._ensure_decode_state()
         self._key, sub = jax.random.split(self._key)
         t0 = self.clock()
-        next_tok, self.cache, self.lengths = self._jit_decode(
-            self.params, self.cur_token, self.cache, self.lengths,
-            jnp.asarray(active), sub,
-        )
+        if self.paged:
+            next_tok, self.cache, self.lengths = self._jit_decode_paged(
+                self.params, self.cur_token, self.cache, self.lengths,
+                jnp.asarray(active), jnp.asarray(self.block_tables), sub,
+            )
+        else:
+            next_tok, self.cache, self.lengths = self._jit_decode(
+                self.params, self.cur_token, self.cache, self.lengths,
+                jnp.asarray(active), sub,
+            )
         next_np = np.asarray(next_tok)
         dt = self.clock() - t0
         n_active = int(active.sum())
-        mj = self._mj_per_token()
-        self.stats.merge_decode(n_active, dt, mj * n_active / 1e3)
         self.cur_token = next_tok
+
+        # ---- energy + traffic attribution for this step ------------------
+        mj = self._mj_per_token()
+        per_req_j = {}
+        read_total = write_total = 0
+        if self.paged:
+            bs = self.kv_block_size
+            block_bytes = bs * self._kv_token_bytes
+            blocks_touched = 0
+            power = self.op.power_w if self.op is not None else 0.0
+            for i, req in enumerate(self.slot_req):
+                if req is None:
+                    continue
+                nb_i = int(self._host_lengths[i]) // bs + 1   # incl. write block
+                read_i = nb_i * block_bytes + self._state_read_bytes \
+                    + self._weight_bytes // n_active           # amortised weights
+                write_i = self._kv_token_bytes + self._state_write_bytes
+                blocks_touched += nb_i
+                read_total += read_i
+                write_total += write_i
+                req.decode_read_bytes += read_i
+                req.decode_write_bytes += write_i
+                if self.hbm_bw_eff > 0 and self.op is not None:
+                    per_req_j[i] = joules_from_hbm_traffic(
+                        power, read_i + write_i, self.hbm_bw_eff
+                    )
+            self.traffic.count_reads(blocks_touched, read_total)
+            self.traffic.count_writes(n_active, write_total)
+            self.traffic.count_step()
+        step_j = sum(per_req_j.values()) if per_req_j else mj * n_active / 1e3
+        self.stats.merge_decode(n_active, dt, step_j, read_total, write_total)
 
         for i, req in enumerate(self.slot_req):
             if req is None:
                 continue
+            self._host_lengths[i] += 1
             req.decode_s += dt / max(n_active, 1)
-            req.decode_j += mj / 1e3
+            req.decode_j += per_req_j.get(i, mj / 1e3)
             tok = int(next_np[i])
             req.output.append(tok)
-            if tok == EOS or len(req.output) >= req.max_new_tokens:
+            if tok == self._req_eos(req) or len(req.output) >= req.max_new_tokens:
                 req.done = True
                 finished.append(req)
                 self.slot_req[i] = None
+                if self.paged:
+                    self.allocator.free(self._slot_blocks(i), owner=req.uid)
+                    self.block_tables[i] = NULL_PAGE
+                    self._host_lengths[i] = 0
         if finished:
             self._refresh_gauge()
         return finished
+
+    # --------------------------------------------------------------- defrag
+    def defrag(self):
+        """Compact live blocks to the lowest page ids: remap every slot's
+        table and physically move the pages in one jitted gather. Decode
+        output is invariant (paging is pure layout)."""
+        if not self.paged or self.cache is None:
+            return
+        mapping = self.allocator.defrag()
+        remap = np.arange(self.allocator.num_blocks + 1)
+        for old, new in mapping.items():
+            remap[old] = new
+        self.block_tables = np.where(
+            self.block_tables != NULL_PAGE, remap[self.block_tables], NULL_PAGE
+        ).astype(np.int32)
+        # perm[new_page] = old_page; untouched ids map identity (their
+        # contents are dead anyway once the allocator freed them)
+        perm = np.arange(self.allocator.num_blocks + 1)
+        for old, new in mapping.items():
+            perm[new] = old
+        perm_j = jnp.asarray(perm)
+
+        def move(leaf, is_paged):
+            return leaf[:, perm_j] if is_paged else leaf
+
+        self.cache = jax.tree.map(move, self.cache, self._layout)

@@ -6,14 +6,22 @@ import numpy as np
 import pytest
 
 from repro.kernels import (
+    clamp_block,
     decode_attention,
     decode_attention_ref,
     gdn_prefill,
     gdn_scan_ref,
     gqa_decode_attention,
+    gqa_paged_decode_attention,
+    largest_divisor_block,
     mla_fused_decode,
     mla_latent_decode,
     mla_latent_decode_ref,
+    mla_paged_fused_decode,
+    mla_paged_latent_decode,
+    mla_paged_latent_decode_ref,
+    paged_decode_attention,
+    paged_decode_attention_ref,
     ssd_prefill,
     ssd_scan_ref,
 )
@@ -76,6 +84,89 @@ class TestDecodeAttn:
         np.testing.assert_allclose(np.asarray(out)[0], np.asarray(v)[0, 0, 0][None].repeat(2, 0), rtol=1e-5)
 
 
+def _random_tables(key, b, nb, n_pages, valid_blocks):
+    """Block tables with DISTINCT live pages per request (shuffled, so pages
+    are deliberately non-contiguous) padded with the null page 0."""
+    perm = jax.random.permutation(key, jnp.arange(1, n_pages))
+    tables = np.zeros((b, nb), np.int32)
+    used = 0
+    for i in range(b):
+        n = int(valid_blocks[i])
+        tables[i, :n] = np.asarray(perm[used:used + n])
+        used += n
+    return jnp.asarray(tables)
+
+
+class TestPagedDecodeAttn:
+    @pytest.mark.parametrize("b,h,kv,dk,dv,bs,nb", [
+        (1, 4, 1, 16, 16, 8, 4),       # MQA
+        (2, 8, 2, 32, 16, 16, 3),      # GQA, asymmetric dv
+        (3, 6, 6, 16, 16, 8, 4),       # MHA
+    ])
+    def test_sweep_vs_ref(self, b, h, kv, dk, dv, bs, nb):
+        key = jax.random.PRNGKey(b * 100 + h)
+        n_pages = 1 + b * nb
+        q = jax.random.normal(key, (b, h, dk), jnp.float32)
+        kp = jax.random.normal(jax.random.fold_in(key, 1), (n_pages, bs, kv, dk))
+        vp = jax.random.normal(jax.random.fold_in(key, 2), (n_pages, bs, kv, dv))
+        valid_blocks = jax.random.randint(jax.random.fold_in(key, 3), (b,), 1, nb + 1)
+        tables = _random_tables(jax.random.fold_in(key, 4), b, nb, n_pages, valid_blocks)
+        # valid length lands inside the last live block
+        vl = (valid_blocks - 1) * bs + jax.random.randint(
+            jax.random.fold_in(key, 5), (b,), 1, bs + 1)
+        out = paged_decode_attention(q, kp, vp, tables, vl, scale=0.2)
+        ref = paged_decode_attention_ref(q, kp, vp, tables, vl, scale=0.2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL[jnp.float32])
+
+    def test_matches_dense_kernel_on_gathered_layout(self):
+        """Paged kernel == dense kernel fed the gathered contiguous cache:
+        the block-table indirection must be pure layout."""
+        key = jax.random.PRNGKey(3)
+        b, h, kv, d, bs, nb = 2, 4, 2, 32, 16, 4
+        n_pages = 1 + b * nb
+        q = jax.random.normal(key, (b, h, d))
+        kp = jax.random.normal(jax.random.fold_in(key, 1), (n_pages, bs, kv, d))
+        vp = jax.random.normal(jax.random.fold_in(key, 2), (n_pages, bs, kv, d))
+        tables = _random_tables(jax.random.fold_in(key, 3), b, nb, n_pages,
+                                np.array([4, 3]))
+        vl = jnp.array([60, 41], jnp.int32)
+        out = paged_decode_attention(q, kp, vp, tables, vl, scale=0.18)
+        k_dense = kp[tables].reshape(b, nb * bs, kv, d)
+        v_dense = vp[tables].reshape(b, nb * bs, kv, d)
+        ref = decode_attention(q, k_dense, v_dense, vl, scale=0.18, block_k=bs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=5e-5, atol=5e-5)
+
+    def test_wrapper_accepts_query_seq_axis(self):
+        key = jax.random.PRNGKey(4)
+        b, h, kv, d, bs, nb = 2, 4, 2, 16, 8, 2
+        n_pages = 1 + b * nb
+        q = jax.random.normal(key, (b, 1, h, d))
+        kp = jax.random.normal(jax.random.fold_in(key, 1), (n_pages, bs, kv, d))
+        vp = jax.random.normal(jax.random.fold_in(key, 2), (n_pages, bs, kv, d))
+        tables = _random_tables(jax.random.fold_in(key, 3), b, nb, n_pages,
+                                np.array([2, 1]))
+        vl = jnp.array([12, 5], jnp.int32)
+        out = gqa_paged_decode_attention(q, kp, vp, tables, vl, scale=0.25)
+        assert out.shape == (b, 1, h, d)
+        ref = paged_decode_attention_ref(q[:, 0], kp, vp, tables, vl, scale=0.25)
+        np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                                   rtol=5e-5, atol=5e-5)
+
+
+class TestCommonHelpers:
+    def test_clamp_block(self):
+        assert clamp_block(512, 100) == 100    # one tile covers the axis
+        assert clamp_block(32, 100) == 32      # tile + padding
+        assert clamp_block(64, 64) == 64
+        with pytest.raises(ValueError):
+            clamp_block(0, 10)
+
+    def test_largest_divisor_block(self):
+        assert largest_divisor_block(8, 12) == 6
+        assert largest_divisor_block(4, 12) == 4
+        assert largest_divisor_block(5, 7) == 1
+
+
 class TestMLADecode:
     @pytest.mark.parametrize("b,h,rank,rope,l,blk", [
         (1, 8, 32, 8, 64, 32),
@@ -118,6 +209,60 @@ class TestMLADecode:
             p["w_uk"], p["w_uv"], p["w_o"], q_nope[:, 0], q_rope[:, 0],
             ckv, kr, vl, scale=_mla_scale(cfg), block_l=16,
         )
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+class TestPagedMLADecode:
+    @pytest.mark.parametrize("b,h,rank,rope,bs,nb", [
+        (1, 8, 32, 8, 8, 4),
+        (2, 16, 64, 16, 16, 3),
+        (2, 4, 16, 8, 8, 4),
+    ])
+    def test_sweep_vs_ref(self, b, h, rank, rope, bs, nb):
+        key = jax.random.PRNGKey(b * 10 + h)
+        n_pages = 1 + b * nb
+        ql = jax.random.normal(key, (b, h, rank))
+        qr = jax.random.normal(jax.random.fold_in(key, 1), (b, h, rope))
+        cp = jax.random.normal(jax.random.fold_in(key, 2), (n_pages, bs, rank))
+        krp = jax.random.normal(jax.random.fold_in(key, 3), (n_pages, bs, rope))
+        valid_blocks = jax.random.randint(jax.random.fold_in(key, 4), (b,), 1, nb + 1)
+        tables = _random_tables(jax.random.fold_in(key, 5), b, nb, n_pages, valid_blocks)
+        vl = (valid_blocks - 1) * bs + jax.random.randint(
+            jax.random.fold_in(key, 6), (b,), 1, bs + 1)
+        out = mla_paged_latent_decode(ql, qr, cp, krp, tables, vl, scale=0.12)
+        ref = mla_paged_latent_decode_ref(ql, qr, cp, krp, tables, vl, scale=0.12)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=5e-5, atol=5e-5)
+
+    def test_paged_fused_equals_dense_fused(self):
+        """mla_paged_fused_decode == mla_fused_decode on the gathered cache
+        (same absorb einsums, paged latent kernel inside)."""
+        from repro.models.config import ModelConfig, StageSpec
+        from repro.models.mla import init_mla, _mla_scale
+        cfg = ModelConfig(
+            name="t", family="dense", d_model=32, vocab_size=64,
+            stages=(StageSpec(unit=("mla",), n_units=1),),
+            n_heads=4, kv_lora_rank=16, qk_nope_head_dim=8, qk_rope_head_dim=4,
+            v_head_dim=8, d_ff=64, param_dtype="float32", compute_dtype="float32",
+        )
+        p = init_mla(jax.random.PRNGKey(0), cfg, jnp.float32)
+        B, bs, nb = 2, 8, 3
+        n_pages = 1 + B * nb
+        key = jax.random.PRNGKey(1)
+        q_nope = jax.random.normal(key, (B, cfg.n_heads, 8))
+        q_rope = jax.random.normal(jax.random.fold_in(key, 1), (B, cfg.n_heads, 4))
+        cp = jax.random.normal(jax.random.fold_in(key, 2), (n_pages, bs, 16))
+        krp = jax.random.normal(jax.random.fold_in(key, 3), (n_pages, bs, 4))
+        tables = _random_tables(jax.random.fold_in(key, 4), B, nb, n_pages,
+                                np.array([3, 2]))
+        vl = jnp.array([22, 11], jnp.int32)
+        out = mla_paged_fused_decode(
+            p["w_uk"], p["w_uv"], p["w_o"], q_nope, q_rope,
+            cp, krp, tables, vl, scale=_mla_scale(cfg))
+        ckv = cp[tables].reshape(B, nb * bs, 16)
+        kr = krp[tables].reshape(B, nb * bs, 4)
+        ref = mla_fused_decode(
+            p["w_uk"], p["w_uv"], p["w_o"], q_nope, q_rope,
+            ckv, kr, vl, scale=_mla_scale(cfg), block_l=bs)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
 
 
