@@ -20,6 +20,7 @@ def main() -> None:
         policy_bench,
         roofline_report,
         serve_cluster,
+        serve_trace,
         table1_power_cap,
         tpu_native,
     )
@@ -33,6 +34,7 @@ def main() -> None:
         hypotheses_bench,
         policy_bench,
         serve_cluster,
+        serve_trace,
         tpu_native,
         kernels_micro,
         roofline_report,

@@ -8,6 +8,9 @@ Layers:
   pareto      — lock-vs-cap frontier and dominance tests
   crossover   — total request energy vs output length
   metering    — 50 ms sampling + trapezoidal integration methodology
+  clock       — VirtualClock: the pluggable simulated timeline
+  latency     — per-request TTFT/TBT event ledger + percentile summaries
+  traces      — seeded arrival processes x length profiles for replay
   hypotheses  — the paper's six formalised hypotheses
   characterize— the full sweep driver
 """
@@ -35,6 +38,20 @@ from repro.core.metering import (
     TrafficCounter,
     integrate_trace,
 )
+from repro.core.clock import VirtualClock
+from repro.core.latency import (
+    LatencyLedger,
+    LatencySummary,
+    percentile,
+    summarize_latency,
+)
+from repro.core.traces import (
+    TracedRequest,
+    diurnal_arrivals,
+    generate_trace,
+    onoff_arrivals,
+    poisson_arrivals,
+)
 from repro.core.hypotheses import HypothesisResult, evaluate_hypotheses
 from repro.core.characterize import Record, characterize, filter_records, to_csv
 
@@ -48,6 +65,10 @@ __all__ = [
     "RequestEnergy", "crossover_output_length", "energy_curve", "request_energy",
     "CounterCrossValidator", "EnergyMeasurement", "EnergyMeter", "GaugeSource",
     "PowerSampler", "PowerTrace", "TrafficCounter", "integrate_trace",
+    "VirtualClock",
+    "LatencyLedger", "LatencySummary", "percentile", "summarize_latency",
+    "TracedRequest", "generate_trace",
+    "poisson_arrivals", "onoff_arrivals", "diurnal_arrivals",
     "HypothesisResult", "evaluate_hypotheses",
     "Record", "characterize", "filter_records", "to_csv",
 ]

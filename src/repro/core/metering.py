@@ -97,16 +97,30 @@ class GaugeSource:
 
 
 class PowerSampler:
+    """Polls a power source over time. Two drive modes:
+
+    * **threaded** (default) — a daemon thread samples every ``interval_s``
+      of wall time, NVML style. The seed behaviour.
+    * **synchronous** (``synchronous=True``) — no thread; the caller invokes
+      :meth:`advance` at every explicit clock movement or source change.
+      This is the virtual-time path: with samples taken exactly at the
+      breakpoints of a piecewise-constant power signal, the trapezoid over
+      the trace is an *exact* integral, and replays are deterministic
+      because no wall-clock jitter enters the trace.
+    """
+
     def __init__(
         self,
         source: Callable[[], float],
         *,
         interval_s: float = 0.050,
         clock: Callable[[], float] = time.monotonic,
+        synchronous: bool = False,
     ):
         self.source = source
         self.interval_s = interval_s
         self.clock = clock
+        self.synchronous = synchronous
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.trace = PowerTrace([], [])
@@ -115,20 +129,30 @@ class PowerSampler:
         self.trace.times_s.append(self.clock())
         self.trace.watts.append(float(self.source()))
 
+    def advance(self):
+        """Synchronous sampling hook: record (now, watts). Call after the
+        (virtual) clock moved or right around a source change."""
+        self.sample_once()
+
     def start(self):
         self._stop.clear()
         self.trace = PowerTrace([], [])
+        self.sample_once()
+        if self.synchronous:
+            return
 
         def loop():
             while not self._stop.is_set():
                 self.sample_once()
                 self._stop.wait(self.interval_s)
 
-        self.sample_once()
         self._thread = threading.Thread(target=loop, daemon=True)
         self._thread.start()
 
     def stop(self):
+        if self.synchronous:
+            self.sample_once()
+            return
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=2.0)

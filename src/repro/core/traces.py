@@ -1,0 +1,180 @@
+"""Seeded arrival-trace generation for trace-driven serving.
+
+A trace is a list of ``TracedRequest``s — (arrival time, prompt tokens,
+decode budget) — that ``Cluster.run_trace`` releases into the waiting
+queue as the serving clock crosses each arrival timestamp. Everything is
+drawn from one ``numpy`` Generator, so a (cfg, spec, seed) triple always
+produces the byte-identical trace: the determinism the virtual-time
+replay's reproducibility contract rests on.
+
+Arrival processes (the TokenPowerBench-style grid):
+
+* ``poisson``  — homogeneous Poisson: i.i.d. exponential inter-arrivals.
+* ``onoff``    — bursty ON/OFF: Poisson at an elevated rate inside ON
+  windows, silence in OFF windows; mean rate matches ``rate_rps``. The
+  burst shape is what exposes idle-floor energy between bursts.
+* ``diurnal``  — non-homogeneous Poisson via thinning against a sinusoidal
+  rate profile (a day compressed to ``period_s``); mean rate ``rate_rps``.
+
+Length profiles (prompt length x decode budget):
+
+* ``short_chat``   — short prompts, short answers (interactive chat).
+* ``long_context`` — prompts near the context cap, few new tokens
+  (retrieval / summarisation).
+* ``mixed``        — ``mix_long`` fraction long-context, rest short-chat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+ARRIVALS = ("poisson", "onoff", "diurnal")
+LENGTHS = ("short_chat", "long_context", "mixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class TracedRequest:
+    """One trace entry: when it arrives and what it asks for."""
+
+    arrival_s: float
+    prompt: np.ndarray                  # (L,) int32 token ids
+    max_new_tokens: int
+    temperature: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+
+# ------------------------------------------------------------ arrival times
+def poisson_arrivals(n: int, rate_rps: float, rng: np.random.Generator) -> np.ndarray:
+    if rate_rps <= 0:
+        raise ValueError("rate_rps must be > 0")
+    return np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+
+
+def onoff_arrivals(
+    n: int,
+    rate_rps: float,
+    rng: np.random.Generator,
+    *,
+    on_s: float = 4.0,
+    off_s: float = 8.0,
+) -> np.ndarray:
+    """Markov-modulated bursts: all arrivals land inside ON windows at rate
+    ``rate_rps * (on+off)/on`` so the long-run mean stays ``rate_rps``."""
+    if rate_rps <= 0 or on_s <= 0 or off_s < 0:
+        raise ValueError("rates and window lengths must be positive")
+    rate_on = rate_rps * (on_s + off_s) / on_s
+    period = on_s + off_s
+    out = np.empty(n)
+    t = 0.0
+    for i in range(n):
+        t += rng.exponential(1.0 / rate_on)
+        # fold any spill past the ON window into the next period's ON window
+        while (t % period) >= on_s:
+            t = (t // period + 1.0) * period + (t % period - on_s)
+        out[i] = t
+    return out
+
+
+def diurnal_arrivals(
+    n: int,
+    rate_rps: float,
+    rng: np.random.Generator,
+    *,
+    period_s: float = 120.0,
+    depth: float = 0.8,
+) -> np.ndarray:
+    """Thinning against rate(t) = rate_rps * (1 + depth*sin(2*pi*t/T))."""
+    if not 0.0 <= depth < 1.0:
+        raise ValueError("depth must be in [0, 1)")
+    lam_max = rate_rps * (1.0 + depth)
+    out = np.empty(n)
+    t = 0.0
+    i = 0
+    while i < n:
+        t += rng.exponential(1.0 / lam_max)
+        lam_t = rate_rps * (1.0 + depth * np.sin(2.0 * np.pi * t / period_s))
+        if rng.uniform() * lam_max <= lam_t:
+            out[i] = t
+            i += 1
+    return out
+
+
+_ARRIVAL_FNS: Dict[str, Callable] = {
+    "poisson": poisson_arrivals,
+    "onoff": onoff_arrivals,
+    "diurnal": diurnal_arrivals,
+}
+
+
+# ---------------------------------------------------------- length profiles
+def _sample_lengths(
+    kind: str,
+    rng: np.random.Generator,
+    *,
+    max_total_len: int,
+    mix_long: float,
+) -> Tuple[int, int]:
+    """One (prompt_len, max_new_tokens) draw; always fits max_total_len."""
+    if kind == "mixed":
+        kind = "long_context" if rng.uniform() < mix_long else "short_chat"
+    if kind == "short_chat":
+        prompt = int(rng.integers(8, min(33, max(10, max_total_len // 3))))
+        new = int(rng.integers(8, 25))
+    elif kind == "long_context":
+        lo = max(16, int(max_total_len * 0.5))
+        hi = max(lo + 1, int(max_total_len * 0.85))
+        prompt = int(rng.integers(lo, hi))
+        new = int(rng.integers(4, 13))
+    else:
+        raise ValueError(f"unknown length profile {kind!r}; have {LENGTHS}")
+    new = max(1, min(new, max_total_len - prompt))
+    return prompt, new
+
+
+def generate_trace(
+    cfg: ModelConfig,
+    n: int,
+    *,
+    arrival: str = "poisson",
+    lengths: str = "short_chat",
+    rate_rps: float = 2.0,
+    seed: int = 0,
+    max_total_len: int = 128,
+    mix_long: float = 0.3,
+    temperature: float = 0.0,
+    arrival_kwargs: Optional[dict] = None,
+) -> List[TracedRequest]:
+    """The seeded trace: ``n`` requests, arrival process x length profile.
+
+    ``max_total_len`` caps prompt+decode per request so every entry is
+    servable on a pool with that ``max_seq_len``. Prompt token ids avoid
+    the config's EOS id so greedy replays never stop early by accident of
+    the prompt distribution.
+    """
+    if arrival not in _ARRIVAL_FNS:
+        raise ValueError(f"unknown arrival process {arrival!r}; have {ARRIVALS}")
+    if lengths not in LENGTHS:
+        raise ValueError(f"unknown length profile {lengths!r}; have {LENGTHS}")
+    rng = np.random.default_rng(seed)
+    times = _ARRIVAL_FNS[arrival](n, rate_rps, rng, **(arrival_kwargs or {}))
+    out: List[TracedRequest] = []
+    for i in range(n):
+        prompt_len, new = _sample_lengths(
+            lengths, rng, max_total_len=max_total_len, mix_long=mix_long)
+        prompt = rng.integers(1, cfg.vocab_size, size=prompt_len).astype(np.int32)
+        if cfg.eos_token_id != 0:
+            prompt[prompt == cfg.eos_token_id] = 2 if cfg.eos_token_id == 1 else 1
+        out.append(TracedRequest(
+            arrival_s=float(times[i]),
+            prompt=prompt,
+            max_new_tokens=new,
+            temperature=temperature,
+        ))
+    return out

@@ -1,6 +1,10 @@
 """Serving substrate: phase pools (dense or paged continuous batching), the
 single-pool engine, and the phase-disaggregated cluster with its
-energy-aware clock controller."""
+energy-aware clock controller — wall-clock or virtual-time (trace replay
+with an SLO-regulated DVFS loop)."""
+from repro.core.clock import VirtualClock
+from repro.core.latency import LatencyLedger, LatencySummary, summarize_latency
+from repro.core.traces import TracedRequest, generate_trace
 from repro.serving.cluster import Cluster, Scheduler
 from repro.serving.controller import ClockController, Transition
 from repro.serving.engine import EOS, PhaseStats, Request, ServingEngine
@@ -20,4 +24,10 @@ __all__ = [
     "BlockAllocator",
     "TrafficCounter",
     "NULL_PAGE",
+    "VirtualClock",
+    "LatencyLedger",
+    "LatencySummary",
+    "summarize_latency",
+    "TracedRequest",
+    "generate_trace",
 ]

@@ -30,17 +30,36 @@ not just slots — the migration scatter becomes a block-table handoff
 (copy-on-migrate into freshly allocated pages), preempted requests come
 back through the queue head, and decode joules derive from the pool's
 block-level ``TrafficCounter`` instead of the shape-based estimate.
+
+With ``clock=VirtualClock()`` the cluster replays in virtual time:
+``run_trace`` releases a seeded arrival trace (``repro.core.traces``) into
+the queue as simulated time crosses each arrival stamp, pools advance the
+shared clock by modelled step durations, idle joules accrue across arrival
+gaps, and every request's ``LatencyLedger`` yields TTFT/TBT percentiles.
+After each decode step the cluster feeds measured latencies back to the
+controller — that closed loop is what ``ClockController(mode="slo")``
+regulates on. A cluster tick serialises admission prefills and the decode
+step on the one shared timeline (the conservative colocated-device view of
+a tick's latency; per-pool overlap is future work).
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional
 
 import numpy as np
 
+from repro.core.clock import VirtualClock
+from repro.core.traces import TracedRequest
 from repro.models.config import ModelConfig
 from repro.serving.controller import ClockController
-from repro.serving.pool import PhaseStats, Pool, Request
+from repro.serving.pool import (
+    PhaseStats,
+    Pool,
+    Request,
+    head_validator,
+    observe_latencies,
+)
 
 
 class Scheduler:
@@ -74,16 +93,10 @@ class Scheduler:
         if not waiting:
             self._credit = 0.0
             return []
-        # fail fast on an unservable head: a prompt that can never fit (seq
-        # length, or a paged budget smaller than the request alone) would
-        # otherwise keep can_admit False forever and livelock the queue
-        # without ever reaching the in-loop validate
-        try:
-            decode_pool.validate(waiting[0])
-        except ValueError:
-            waiting.pop(0)
-            raise
-        if decode_pool.can_admit(waiting[0]):
+        validated_head = head_validator(waiting, decode_pool)
+        # fail fast even when admission is impossible this tick
+        head = validated_head()
+        if decode_pool.can_admit(head):
             # accrue only while admission is possible, capped at
             # max(chunk, head need) — a full decode pool must not bank
             # credit that later releases one giant prefill burst.
@@ -91,18 +104,11 @@ class Scheduler:
             # asks the block allocator, not a fixed slot count.
             self._credit = min(
                 self._credit + self.chunk_tokens,
-                max(float(self.chunk_tokens), float(len(waiting[0].prompt))),
+                max(float(self.chunk_tokens), float(len(head.prompt))),
             )
         admitted: List[Request] = []
         while waiting and decode_pool.can_admit(waiting[0]):
-            req = waiting[0]
-            try:
-                decode_pool.validate(req)
-            except ValueError:
-                # drop the poison request before surfacing the error, or it
-                # would block the queue head forever (engine semantics)
-                waiting.pop(0)
-                raise
+            req = validated_head()
             need = len(req.prompt)
             if need > self._credit:
                 break
@@ -151,14 +157,29 @@ class Cluster:
         )
         self.controller = controller
         self.scheduler = Scheduler(prefill_chunk_tokens)
+        self.clock = clock
+        self.virtual = isinstance(clock, VirtualClock)
         self.waiting: List[Request] = []
         self._uid = 0
         self._step_no = 0
 
     # ------------------------------------------------------------------ api
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int = 32,
+        *,
+        temperature: float = 0.0,
+        eos_token_id: Optional[int] = None,
+        arrival_s: Optional[float] = None,
+    ) -> Request:
+        """Queue a request. ``arrival_s`` overrides the arrival stamp (the
+        trace replay passes the trace's own timestamp so queueing delay that
+        happened *during* a long step is still charged to TTFT)."""
         req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens)
+                      max_new_tokens=max_new_tokens,
+                      temperature=temperature, eos_token_id=eos_token_id)
+        req.ledger.mark_arrival(self.clock() if arrival_s is None else arrival_s)
         self._uid += 1
         self.waiting.append(req)
         return req
@@ -177,6 +198,8 @@ class Cluster:
             # tokens are priced at the true post-admission operating point
             self.controller.tick(self.pools(), self._step_no)
         finished = self.decode_pool.decode_once()
+        if self.controller is not None:
+            observe_latencies(self.controller, self.decode_pool, admitted, finished)
         # preempted requests go back to the queue head: they are the oldest
         # work in flight, and FIFO admission re-prefills them first
         evicted = self.decode_pool.take_evicted()
@@ -186,6 +209,63 @@ class Cluster:
 
     def busy(self) -> bool:
         return bool(self.waiting) or self.decode_pool.occupancy() > 0
+
+    # -------------------------------------------------------- trace replay
+    def _advance_idle(self, dt_s: float):
+        """Cross an idle gap between trace arrivals. Virtual: jump the
+        shared clock and sample both pools so idle-floor joules accrue over
+        the gap; wall: actually wait it out."""
+        if dt_s <= 0:
+            return
+        if self.virtual:
+            self.clock.advance(dt_s)
+            for pool in self.pools().values():
+                pool.sample_now()
+        else:
+            time.sleep(dt_s)
+
+    def run_trace(
+        self,
+        trace: Iterable[TracedRequest],
+        *,
+        max_steps: int = 1000000,
+    ) -> List[Request]:
+        """Replay an arrival trace: each entry enters the waiting queue when
+        the serving clock crosses its ``arrival_s`` (relative to replay
+        start). With a ``VirtualClock`` the whole replay is deterministic —
+        service time is the modelled step time at each pool's live
+        operating point, and idle joules accrue across arrival gaps.
+        """
+        if self.virtual and self.controller is None:
+            raise ValueError(
+                "virtual-time replay needs a ClockController: without an "
+                "operating point the pools cannot model step durations")
+        pending = sorted(trace, key=lambda t: t.arrival_s)
+        t_start = self.clock()
+        done: List[Request] = []
+        i = 0
+        steps = 0
+        self.start_metering()
+        try:
+            while (i < len(pending) or self.busy()) and steps < max_steps:
+                now = self.clock() - t_start
+                while i < len(pending) and pending[i].arrival_s <= now:
+                    t = pending[i]
+                    i += 1
+                    self.submit(t.prompt, t.max_new_tokens,
+                                temperature=t.temperature,
+                                arrival_s=t_start + t.arrival_s)
+                if not self.busy():
+                    if i >= len(pending):
+                        break
+                    # nothing in flight: idle until the next arrival
+                    self._advance_idle(pending[i].arrival_s - now)
+                    continue
+                done.extend(self.step())
+                steps += 1
+        finally:
+            self.stop_metering()
+        return done
 
     def run_to_completion(self, max_steps: int = 100000) -> List[Request]:
         done: List[Request] = []

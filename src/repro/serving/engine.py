@@ -22,7 +22,14 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.serving.controller import ClockController
-from repro.serving.pool import EOS, PhaseStats, Pool, Request
+from repro.serving.pool import (
+    EOS,
+    PhaseStats,
+    Pool,
+    Request,
+    head_validator,
+    observe_latencies,
+)
 
 __all__ = ["EOS", "PhaseStats", "Request", "ServingEngine"]
 
@@ -68,29 +75,34 @@ class ServingEngine:
     def slot_req(self) -> List[Optional[Request]]:
         return self.pool.slot_req
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int = 32,
+        *,
+        temperature: float = 0.0,
+        eos_token_id: Optional[int] = None,
+    ) -> Request:
         req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens)
+                      max_new_tokens=max_new_tokens,
+                      temperature=temperature, eos_token_id=eos_token_id)
+        req.ledger.mark_arrival(self.clock())
         self._uid += 1
         self.waiting.append(req)
         return req
 
-    def _admit(self) -> int:
-        admitted = 0
-        if self.waiting:
-            # fail fast on an unservable head (see Scheduler.tick): a paged
-            # budget smaller than the request alone would never admit
-            try:
-                self.pool.validate(self.waiting[0])
-            except ValueError:
-                self.waiting.pop(0)
-                raise
+    def _admit(self) -> List[Request]:
+        if not self.waiting:
+            return []
+        validated_head = head_validator(self.waiting, self.pool)
+        validated_head()    # fail fast even when admission is impossible
+        admitted: List[Request] = []
         while self.waiting and self.pool.can_admit(self.waiting[0]):
-            req = self.waiting.pop(0)
-            self.pool.validate(req)
+            req = validated_head()
+            self.waiting.pop(0)
             first, cache1 = self.pool.prefill_request(req)
             self.pool.place(req, cache1, first, len(req.prompt))
-            admitted += 1
+            admitted.append(req)
         return admitted
 
     def step(self) -> List[Request]:
@@ -103,6 +115,8 @@ class ServingEngine:
             # re-resolve at the true post-admission occupancy (see Cluster.step)
             self.controller.tick({"mixed": self.pool}, self._step_no)
         finished = self.pool.decode_once()
+        if self.controller is not None:
+            observe_latencies(self.controller, self.pool, admitted, finished)
         evicted = self.pool.take_evicted()
         if evicted:
             self.waiting[:0] = evicted

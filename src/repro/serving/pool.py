@@ -28,6 +28,22 @@ Two cache layouts:
   measured bytes (``repro.core.energy.joules_from_hbm_traffic``) instead
   of the shape-based energy/token estimate.
 
+Two clocks (``repro.core.clock``):
+
+* **wall** (the default ``time.perf_counter``) — the seed behaviour,
+  token-identical to before the virtual-time refactor.
+* **virtual** (pass a ``VirtualClock``) — the pool *advances* the clock by
+  the modelled duration of each phase call (``op.profile.t_total`` at its
+  live operating point) and meters energy synchronously (no sampler
+  thread), so trace replays are deterministic and DVFS decisions feed back
+  into simulated TTFT/TBT. Requires a ClockController to supply operating
+  points; without one virtual time simply never advances.
+
+Every request carries a ``LatencyLedger`` stamped here on the serving
+clock — arrival (by the cluster/engine), admitted (prefill start), first
+token (placement), every decode token, finish — from which TTFT and
+per-step TBT derive in both clock modes.
+
 JAX-shape discipline is unchanged from the seed engine: decode runs one
 jitted step over ALL slots (static batch, per-slot lengths, active mask);
 prefill runs batch-1 with prompt lengths padded to power-of-2 buckets, and
@@ -45,8 +61,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.clock import VirtualClock
 from repro.core.dvfs import OperatingPoint
 from repro.core.energy import joules_from_hbm_traffic
+from repro.core.latency import LatencyLedger
 from repro.core.metering import GaugeSource, PowerSampler
 from repro.core.workload import weight_stream_bytes
 from repro.models import (
@@ -84,6 +102,9 @@ class Request:
     decode_write_bytes: int = 0
     preemptions: int = 0                   # times evicted + restarted
     done: bool = False
+    # event ledger (arrival/admitted/first-token/finish + per-token stamps),
+    # stamped by the pool on the serving clock — wall or virtual alike
+    ledger: LatencyLedger = dataclasses.field(default_factory=LatencyLedger)
 
     @property
     def energy_j(self) -> float:
@@ -92,6 +113,18 @@ class Request:
     @property
     def decode_bytes(self) -> int:
         return self.decode_read_bytes + self.decode_write_bytes
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        return self.ledger.ttft_s
+
+    @property
+    def tbt_s(self) -> List[float]:
+        return self.ledger.tbt_s
+
+    @property
+    def e2e_s(self) -> Optional[float]:
+        return self.ledger.e2e_s
 
 
 @dataclasses.dataclass
@@ -174,6 +207,45 @@ def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
     return int(2 ** np.ceil(np.log2(n)))
 
 
+def head_validator(waiting: List[Request], pool: "Pool") -> Callable[[], Request]:
+    """The single admission-validation path, shared by ``Scheduler.tick``
+    and ``ServingEngine._admit``: returns a closure that validates the
+    current queue head exactly once, dropping a poison request (one that
+    could never be served, so admission gates would stay closed forever and
+    livelock the queue) before the error surfaces."""
+    validated: Optional[Request] = None
+
+    def validated_head() -> Request:
+        nonlocal validated
+        req = waiting[0]
+        if req is not validated:
+            try:
+                pool.validate(req)
+            except ValueError:
+                waiting.pop(0)
+                raise
+            validated = req
+        return req
+
+    return validated_head
+
+
+def observe_latencies(controller, pool: "Pool", admitted: List[Request],
+                      finished: List[Request]) -> None:
+    """Feed one step's measured latencies back to the controller — the slo
+    mode's closed loop, shared by ``Cluster.step`` and
+    ``ServingEngine.step``: TTFT of everything admitted this tick, plus the
+    inter-token gap every request (still live or just finished) saw from
+    this decode step."""
+    live = [r for r in pool.slot_req if r is not None]
+    controller.observe(
+        ttft_s=[r.ledger.ttft_s for r in admitted
+                if r.ledger.ttft_s is not None],
+        tbt_s=[t for r in live + finished
+               if (t := r.ledger.last_tbt_s) is not None],
+    )
+
+
 class Pool:
     """Slot pool + jitted model calls + phase/energy accounting for one phase."""
 
@@ -198,6 +270,10 @@ class Pool:
         self.max_batch = max_batch
         self.max_seq_len = max_seq_len
         self.clock = clock
+        # virtual mode: the clock only moves when this pool advances it by
+        # the modelled duration of each phase call (needs an operating
+        # point, i.e. a ClockController); metering goes synchronous.
+        self.virtual = isinstance(clock, VirtualClock)
         self.stats = PhaseStats()
         self.eos_token_id = cfg.eos_token_id
 
@@ -211,7 +287,10 @@ class Pool:
         self.hbm_bw_eff: float = 0.0       # set by the controller; enables
                                            # traffic-derived decode joules
         self.gauge = GaugeSource(0.0)
-        self.sampler = PowerSampler(self.gauge, interval_s=meter_interval_s)
+        self.sampler = PowerSampler(
+            self.gauge, interval_s=meter_interval_s, clock=clock,
+            synchronous=self.virtual,
+        )
         self._in_phase_call = False
         self._metering_active = False
         self._measured_j_total = 0.0
@@ -253,6 +332,9 @@ class Pool:
         self._host_lengths = np.zeros(max_batch, np.int64)
         self._admit_seq = np.zeros(max_batch, np.int64)
         self._admit_counter = 0
+        # per-slot sampling temperature (0 = greedy), set at placement so a
+        # mixed batch decodes each slot at its own Request.temperature
+        self._slot_temp = np.zeros(max_batch, np.float32)
 
         self._jit_prefill = jax.jit(self._prefill_impl, static_argnames=("bucket",))
         self._jit_decode = jax.jit(self._decode_impl)
@@ -295,19 +377,30 @@ class Pool:
 
     @staticmethod
     def _sample(logits, key, temperature):
-        if temperature > 0.0:
-            gumbel = -jnp.log(-jnp.log(jax.random.uniform(key, logits.shape) + 1e-9) + 1e-9)
-            return jnp.argmax(logits / temperature + gumbel, axis=-1).astype(jnp.int32)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        """Per-slot sampling: ``temperature`` is a (B,) vector; slots at 0
+        take the argmax (bit-identical to the all-greedy seed path), the
+        rest draw Gumbel-max at their own temperature. The all-greedy batch
+        — the common case — skips the (B, vocab) uniform draw at runtime."""
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-    def _decode_impl(self, params, tokens, cache, lengths, active, key, temperature=0.0):
+        def sampled(_):
+            t = jnp.maximum(temperature, 1e-6)[:, None]
+            gumbel = -jnp.log(
+                -jnp.log(jax.random.uniform(key, logits.shape) + 1e-9) + 1e-9)
+            s = jnp.argmax(logits / t + gumbel, axis=-1).astype(jnp.int32)
+            return jnp.where(temperature > 0.0, s, greedy)
+
+        return jax.lax.cond(
+            jnp.any(temperature > 0.0), sampled, lambda _: greedy, None)
+
+    def _decode_impl(self, params, tokens, cache, lengths, active, key, temperature):
         logits, new_cache, new_lengths = decode_step(params, self.cfg, tokens, cache, lengths)
         next_tok = self._sample(logits, key, temperature)
         new_lengths = jnp.where(active, new_lengths, lengths)
         return next_tok, new_cache, new_lengths
 
     def _decode_paged_impl(self, params, tokens, cache, lengths, active, tables, key,
-                           temperature=0.0):
+                           temperature):
         logits, new_cache, new_lengths = decode_step_paged(
             params, self.cfg, tokens, cache, lengths, active, tables
         )
@@ -329,11 +422,36 @@ class Pool:
         # ticks a pool holding live slots burns its decode-point power;
         # an empty pool sits at the idle floor
         if self._in_phase_call and self.prefill_op is not None:
-            self.gauge.set(self.prefill_op.power_w)
+            watts = self.prefill_op.power_w
         elif self.op is not None and self.occupancy() > 0:
-            self.gauge.set(self.op.power_w)
+            watts = self.op.power_w
         else:
-            self.gauge.set(self.idle_power_w)
+            watts = self.idle_power_w
+        if (self.sampler.synchronous and self._metering_active
+                and watts != self.gauge()):
+            # bracket the step change so the trapezoid integrates the
+            # piecewise-constant power signal exactly: close the old level
+            # at (now, w_old), open the new one at (now, w_new)
+            self.sampler.sample_once()
+            self.gauge.set(watts)
+            self.sampler.sample_once()
+        else:
+            self.gauge.set(watts)
+
+    def sample_now(self):
+        """Synchronous-metering hook: record a sample at the current clock
+        (callers advance the shared VirtualClock, then sample each pool)."""
+        if self.sampler.synchronous and self._metering_active:
+            self.sampler.advance()
+
+    def advance_time(self, dt_s: float):
+        """Advance this pool's (virtual) clock by a modelled duration and
+        take a synchronous power sample, so energy integrates over virtual
+        time without threads. No-op on a wall clock."""
+        if not self.virtual or dt_s <= 0:
+            return
+        self.clock.advance(dt_s)
+        self.sample_now()
 
     @property
     def current_power_w(self) -> float:
@@ -436,7 +554,9 @@ class Pool:
         self.block_tables[slot] = NULL_PAGE
         self.slot_req[slot] = None
         self._host_lengths[slot] = 0
+        self._slot_temp[slot] = 0.0
         req.output = []
+        req.ledger.reset_service()   # TTFT will span the recompute, too
         req.preemptions += 1
         self.evicted.append(req)
         self._refresh_gauge()
@@ -494,12 +614,25 @@ class Pool:
         self._in_phase_call = True
         self._refresh_gauge()
         t0 = self.clock()
+        req.ledger.mark_admitted(t0)
         try:
             logits, cache1 = self._jit_prefill(
                 self.params, jnp.asarray(toks), jnp.asarray([l], jnp.int32), bucket=bucket
             )
-            first = int(np.argmax(np.asarray(logits)[0]))
+            row = np.asarray(logits)[0]
+            if req.temperature > 0.0:
+                self._key, sub = jax.random.split(self._key)
+                u = np.asarray(jax.random.uniform(sub, row.shape))
+                gumbel = -np.log(-np.log(u + 1e-9) + 1e-9)
+                first = int(np.argmax(row / req.temperature + gumbel))
+            else:
+                first = int(np.argmax(row))
             jax.block_until_ready(logits)
+            if self.virtual and self.prefill_op is not None:
+                # modelled prefill duration: the operating point's profile
+                # is per prefill_seq tokens — scale to this prompt's length
+                prof = self.prefill_op.profile
+                self.advance_time(prof.t_total * l / max(prof.tokens, 1))
         finally:
             dt = self.clock() - t0
             self._in_phase_call = False
@@ -542,7 +675,9 @@ class Pool:
         self._host_lengths[slot] = length
         self._admit_counter += 1
         self._admit_seq[slot] = self._admit_counter
+        self._slot_temp[slot] = req.temperature
         req.output.append(first_token)
+        req.ledger.mark_first_token(self.clock())
         self.slot_req[slot] = req
         self.peak_occupancy = max(self.peak_occupancy, self.occupancy())
         self._refresh_gauge()
@@ -564,18 +699,23 @@ class Pool:
             return finished
         self._ensure_decode_state()
         self._key, sub = jax.random.split(self._key)
+        temps = jnp.asarray(self._slot_temp)
         t0 = self.clock()
         if self.paged:
             next_tok, self.cache, self.lengths = self._jit_decode_paged(
                 self.params, self.cur_token, self.cache, self.lengths,
-                jnp.asarray(active), jnp.asarray(self.block_tables), sub,
+                jnp.asarray(active), jnp.asarray(self.block_tables), sub, temps,
             )
         else:
             next_tok, self.cache, self.lengths = self._jit_decode(
                 self.params, self.cur_token, self.cache, self.lengths,
-                jnp.asarray(active), sub,
+                jnp.asarray(active), sub, temps,
             )
         next_np = np.asarray(next_tok)
+        if self.virtual and self.op is not None:
+            # the modelled step duration at the live operating point IS the
+            # virtual-time cost of this decode step
+            self.advance_time(self.op.profile.t_total)
         dt = self.clock() - t0
         n_active = int(active.sum())
         self.cur_token = next_tok
@@ -611,6 +751,7 @@ class Pool:
         step_j = sum(per_req_j.values()) if per_req_j else mj * n_active / 1e3
         self.stats.merge_decode(n_active, dt, step_j, read_total, write_total)
 
+        now = self.clock()
         for i, req in enumerate(self.slot_req):
             if req is None:
                 continue
@@ -619,10 +760,13 @@ class Pool:
             req.decode_j += per_req_j.get(i, mj / 1e3)
             tok = int(next_np[i])
             req.output.append(tok)
+            req.ledger.mark_token(now)
             if tok == self._req_eos(req) or len(req.output) >= req.max_new_tokens:
                 req.done = True
+                req.ledger.mark_finish(now)
                 finished.append(req)
                 self.slot_req[i] = None
+                self._slot_temp[i] = 0.0
                 if self.paged:
                     self.allocator.free(self._slot_blocks(i), owner=req.uid)
                     self.block_tables[i] = NULL_PAGE

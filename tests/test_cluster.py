@@ -133,6 +133,72 @@ class TestScheduler:
         assert len(done) == 5
         assert all(r.done for r in reqs)
 
+    def test_each_request_validated_once_per_tick(self, setup):
+        """The dedupe satellite: the old tick validated the head twice
+        (pre-loop fail-fast + in-loop); the folded path must call validate
+        exactly once per admitted request when admission happens in one
+        tick."""
+        cfg, params = setup
+        cl = Cluster(cfg, params, decode_batch=4, max_seq_len=64,
+                     prefill_chunk_tokens=1000)
+        counts = {}
+        orig = cl.decode_pool.validate
+
+        def counting_validate(req):
+            counts[req.uid] = counts.get(req.uid, 0) + 1
+            return orig(req)
+
+        cl.decode_pool.validate = counting_validate
+        reqs = [cl.submit(p, max_new_tokens=3)
+                for p in make_prompts(cfg, 3, 4, 10, seed=30)]
+        done = cl.run_to_completion()
+        assert len(done) == 3
+        assert counts == {r.uid: 1 for r in reqs}
+
+    def test_submit_plumbs_temperature_and_eos(self, setup):
+        cfg, params = setup
+        cl = Cluster(cfg, params, decode_batch=2, max_seq_len=64,
+                     prefill_chunk_tokens=64)
+        prompt = make_prompts(cfg, 1, 4, 10, seed=31)[0]
+        req = cl.submit(prompt, max_new_tokens=4, temperature=0.7,
+                        eos_token_id=-1)
+        assert req.temperature == 0.7 and req.eos_token_id == -1
+        done = cl.run_to_completion()
+        # eos -1 never matches: the request runs to its full budget
+        assert done and len(req.output) == 4
+        assert all(0 <= t < cfg.vocab_size for t in req.output)
+
+    def test_sampled_neighbor_leaves_greedy_slots_untouched(self, setup):
+        """Per-slot temperature isolation: adding one sampled request to a
+        batch must not perturb the greedy requests' tokens."""
+        cfg, params = setup
+        prompts = make_prompts(cfg, 3, 4, 10, seed=32)
+
+        a = Cluster(cfg, params, decode_batch=3, max_seq_len=64,
+                    prefill_chunk_tokens=64)
+        areqs = [a.submit(p, max_new_tokens=5) for p in prompts]
+        a.run_to_completion()
+
+        b = Cluster(cfg, params, decode_batch=3, max_seq_len=64,
+                    prefill_chunk_tokens=64)
+        breqs = [b.submit(p, max_new_tokens=5,
+                          temperature=1.0 if i == 1 else 0.0)
+                 for i, p in enumerate(prompts)]
+        b.run_to_completion()
+
+        assert areqs[0].output == breqs[0].output
+        assert areqs[2].output == breqs[2].output
+
+    def test_engine_submit_plumbs_temperature_and_eos(self, setup):
+        cfg, params = setup
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq_len=64)
+        prompt = make_prompts(cfg, 1, 4, 10, seed=33)[0]
+        req = eng.submit(prompt, max_new_tokens=4, temperature=0.5,
+                         eos_token_id=-1)
+        assert req.temperature == 0.5 and req.eos_token_id == -1
+        eng.run_to_completion()
+        assert req.done and len(req.output) == 4
+
     def test_oversized_request_rejected(self, setup):
         cfg, params = setup
         cl = Cluster(cfg, params, decode_batch=1, max_seq_len=32,

@@ -88,25 +88,25 @@ class TestBatchMonotonicity:
         assert locks[-1] > locks[0]     # batch-sensitive: clock genuinely rises
 
 
+class FakePool:
+    def __init__(self, role, occ, ctx):
+        self.role, self._occ, self._ctx = role, occ, ctx
+        self.op = None
+
+    def occupancy(self):
+        return self._occ
+
+    def mean_context(self):
+        return self._ctx
+
+    def set_operating_point(self, op, prefill_op=None):
+        self.op = op
+
+
 class TestTransitions:
     def test_transitions_recorded_once_per_lever_change(self):
         """Ticking the same pool state twice records one transition; a regime
         change records another."""
-
-        class FakePool:
-            def __init__(self, role, occ, ctx):
-                self.role, self._occ, self._ctx = role, occ, ctx
-                self.op = None
-
-            def occupancy(self):
-                return self._occ
-
-            def mean_context(self):
-                return self._ctx
-
-            def set_operating_point(self, op, prefill_op=None):
-                self.op = op
-
         ctl = controller("minitron-4b-mla", batch_hi_threshold=8)
         pool = FakePool("decode", 1, 256.0)
         ctl.tick({"decode": pool}, step=1)
@@ -129,6 +129,113 @@ class TestTransitions:
         assert ctl.regime_for("decode", 8, 20000.0) == "bs32_long"
         assert ctl.regime_for("decode", 1, 20000.0) == "bs1"
 
+    @pytest.mark.parametrize("mode", ["default", "cap"])
+    def test_regime_flip_to_same_lever_records_no_transition(self, mode):
+        """The dedup is keyed on the LEVER, not the regime: in default/cap
+        mode every decode regime resolves to the identical lever, so an
+        occupancy swing across the BS=32 boundary must not append."""
+        ctl = controller("minitron-4b-mla", mode=mode, batch_hi_threshold=8)
+        pool = FakePool("decode", 1, 256.0)
+        ctl.tick({"decode": pool}, step=1)
+        assert len(ctl.transitions) == 1
+        pool._occ = 16                      # bs1 -> bs32 regime flip
+        ctl.tick({"decode": pool}, step=2)
+        pool._occ = 1                       # and back
+        ctl.tick({"decode": pool}, step=3)
+        assert len(ctl.transitions) == 1    # no lever change, no entries
+
+    def test_lock_mode_same_clock_regime_flip_records_no_transition(self):
+        """A batch-invariant arch holds one decode clock across batch
+        columns: the regime flips, the resolved lock does not, and the
+        audit trail stays silent."""
+        name = next(n for n, c in sorted(CFGS.items())
+                    if classify_arch(MODEL, c) == "batch-invariant")
+        ctl = controller(name, batch_hi_threshold=8)
+        assert ctl.row.decode_clock_bs1 == ctl.row.decode_clock_bs32
+        pool = FakePool("decode", 1, 256.0)
+        ctl.tick({"decode": pool}, step=1)
+        pool._occ = 16
+        ctl.tick({"decode": pool}, step=2)
+        assert len(ctl.transitions) == 1
+
     def test_unknown_mode_rejected(self):
         with pytest.raises(ValueError, match="unknown controller mode"):
             controller("qwen3-4b", mode="governor")
+
+
+class TestSloMode:
+    """Unit-level walk dynamics; the closed loop over a live cluster is
+    covered in tests/test_virtual_time.py."""
+
+    def _slo(self, **kw):
+        kw.setdefault("slo_tbt_s", 0.05)
+        kw.setdefault("slo_ttft_s", 1.0)
+        kw.setdefault("slo_min_obs", 4)
+        ctl = controller("minitron-4b-mla", mode="slo", **kw)
+        ctl._slo_update("bs1")      # prime the live regime (first update
+        return ctl                  # after a flip only resets observations)
+
+    def test_warm_start_is_exactly_the_policy_prior(self):
+        """Per-regime warm start: the table's lock is a grid member, so the
+        walk begins at EXACTLY lock mode's clock for that regime — slo can
+        never start hotter than lock."""
+        ctl = self._slo()
+        for regime in ("bs1", "bs32", "bs32_long"):
+            prior = MODEL.spec.effective_lock(ctl.row.clock_for(regime))
+            assert ctl.slo_clock_mhz(regime) == prior
+
+    def test_descends_on_slack_and_floors_at_min_energy(self):
+        ctl = self._slo()
+        floor = ctl._slo_floor_mhz("bs1")
+        for _ in range(300):
+            ctl.observe(tbt_s=[1e-6] * 8)       # huge slack
+            ctl._slo_update("bs1")
+        assert ctl.slo_clock_mhz("bs1") >= floor
+        # converged: the next grid notch down would cross the floor
+        grid = ctl._slo_grid()
+        idx = grid.index(ctl.slo_clock_mhz("bs1"))
+        assert idx == 0 or grid[idx - 1] < floor
+
+    def test_regime_flip_uses_per_regime_state(self):
+        """bs1's descent must not leak into bs32: after a flip the clock is
+        bs32's own prior, and flipping back finds bs1's walked clock."""
+        ctl = self._slo()
+        for _ in range(300):
+            ctl.observe(tbt_s=[1e-6] * 8)
+            ctl._slo_update("bs1")
+        walked_bs1 = ctl.slo_clock_mhz("bs1")
+        ctl._slo_update("bs32")
+        assert ctl.slo_clock_mhz("bs32") == \
+            MODEL.spec.effective_lock(ctl.row.clock_for("bs32"))
+        ctl._slo_update("bs1")
+        assert ctl.slo_clock_mhz("bs1") == walked_bs1
+
+    def test_ascends_on_violation(self):
+        ctl = self._slo()
+        start = ctl.slo_clock_mhz("bs1")
+        ctl.observe(tbt_s=[1.0] * 8)            # violated
+        ctl._slo_update("bs1")
+        assert ctl.slo_clock_mhz("bs1") > start
+
+    def test_holds_inside_the_slack_band(self):
+        """Met but without slack headroom: no move either direction."""
+        ctl = self._slo(slo_slack=0.8)
+        start = ctl.slo_clock_mhz("bs1")
+        ctl.observe(tbt_s=[0.045] * 8)          # 90% of target
+        ctl._slo_update("bs1")
+        assert ctl.slo_clock_mhz("bs1") == start
+
+    def test_moves_clear_only_that_regimes_observations(self):
+        ctl = self._slo()
+        ctl.observe(tbt_s=[1.0] * 8)            # attributed to bs1
+        ctl._slo_update("bs32")
+        ctl.observe(tbt_s=[1.0] * 8)            # attributed to bs32
+        ctl._slo_update("bs32")                 # violation -> move, clears bs32
+        assert len(ctl._tbt_obs["bs32"]) == 0
+        assert len(ctl._tbt_obs["bs1"]) == 8    # bs1 evidence survives
+
+    def test_prefill_keeps_the_table_lock_in_slo_mode(self):
+        ctl = self._slo()
+        lever = ctl.lever_for("prefill")
+        assert lever.requested_mhz == \
+            MODEL.spec.effective_lock(ctl.row.clock_for("prefill"))

@@ -1,0 +1,114 @@
+"""Seeded trace generation: determinism, arrival-process shape, length
+profiles staying inside the serving budget."""
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core import (
+    diurnal_arrivals,
+    generate_trace,
+    onoff_arrivals,
+    poisson_arrivals,
+)
+
+CFG = reduced_config("gemma-2b")
+
+
+class TestDeterminism:
+    @pytest.mark.parametrize("arrival", ["poisson", "onoff", "diurnal"])
+    @pytest.mark.parametrize("lengths", ["short_chat", "long_context", "mixed"])
+    def test_same_seed_same_trace(self, arrival, lengths):
+        a = generate_trace(CFG, 20, arrival=arrival, lengths=lengths, seed=5,
+                           rate_rps=3.0, max_total_len=128)
+        b = generate_trace(CFG, 20, arrival=arrival, lengths=lengths, seed=5,
+                           rate_rps=3.0, max_total_len=128)
+        for x, y in zip(a, b):
+            assert x.arrival_s == y.arrival_s
+            assert x.max_new_tokens == y.max_new_tokens
+            np.testing.assert_array_equal(x.prompt, y.prompt)
+
+    def test_different_seed_different_trace(self):
+        a = generate_trace(CFG, 20, seed=1, rate_rps=3.0)
+        b = generate_trace(CFG, 20, seed=2, rate_rps=3.0)
+        assert any(x.arrival_s != y.arrival_s for x, y in zip(a, b))
+
+
+class TestArrivalProcesses:
+    def test_arrivals_sorted_and_positive(self):
+        rng = np.random.default_rng(0)
+        for fn in (poisson_arrivals, onoff_arrivals, diurnal_arrivals):
+            t = fn(200, 5.0, rng)
+            assert (t > 0).all()
+            assert (np.diff(t) >= 0).all(), fn.__name__
+
+    def test_poisson_rate_approximate(self):
+        rng = np.random.default_rng(3)
+        t = poisson_arrivals(2000, 4.0, rng)
+        rate = len(t) / t[-1]
+        assert 3.5 < rate < 4.5
+
+    def test_onoff_arrivals_only_in_on_windows(self):
+        rng = np.random.default_rng(4)
+        t = onoff_arrivals(300, 2.0, rng, on_s=3.0, off_s=6.0)
+        phase = t % 9.0
+        assert (phase < 3.0).all()
+
+    def test_onoff_mean_rate_matches(self):
+        rng = np.random.default_rng(5)
+        t = onoff_arrivals(3000, 2.0, rng, on_s=3.0, off_s=6.0)
+        rate = len(t) / t[-1]
+        assert 1.7 < rate < 2.3
+
+    def test_diurnal_rate_is_time_varying(self):
+        """More arrivals land in the high half of the sine than the low."""
+        rng = np.random.default_rng(6)
+        t = diurnal_arrivals(4000, 5.0, rng, period_s=40.0, depth=0.8)
+        phase = (t % 40.0) / 40.0
+        high = ((phase > 0.0) & (phase < 0.5)).sum()    # sin > 0 half
+        low = ((phase >= 0.5) & (phase < 1.0)).sum()
+        assert high > 1.5 * low
+
+    def test_bad_args_raise(self):
+        rng = np.random.default_rng(0)
+        with pytest.raises(ValueError):
+            poisson_arrivals(5, 0.0, rng)
+        with pytest.raises(ValueError):
+            diurnal_arrivals(5, 1.0, rng, depth=1.5)
+        with pytest.raises(ValueError, match="unknown arrival"):
+            generate_trace(CFG, 3, arrival="stampede")
+        with pytest.raises(ValueError, match="unknown length"):
+            generate_trace(CFG, 3, lengths="sonnets")
+
+
+class TestLengthProfiles:
+    @pytest.mark.parametrize("lengths", ["short_chat", "long_context", "mixed"])
+    def test_requests_fit_budget(self, lengths):
+        cap = 128
+        for t in generate_trace(CFG, 50, lengths=lengths, seed=7,
+                                max_total_len=cap):
+            assert len(t.prompt) + t.max_new_tokens <= cap
+            assert t.max_new_tokens >= 1
+            assert t.prompt.dtype == np.int32
+            assert (t.prompt > 0).all()
+            assert (t.prompt < CFG.vocab_size).all()
+
+    def test_long_context_prompts_are_long(self):
+        short = generate_trace(CFG, 40, lengths="short_chat", seed=8,
+                               max_total_len=128)
+        longc = generate_trace(CFG, 40, lengths="long_context", seed=8,
+                               max_total_len=128)
+        assert np.mean([t.prompt_len for t in longc]) > \
+            3 * np.mean([t.prompt_len for t in short])
+
+    def test_mixed_contains_both(self):
+        mixed = generate_trace(CFG, 60, lengths="mixed", seed=9,
+                               max_total_len=128, mix_long=0.4)
+        lens = [t.prompt_len for t in mixed]
+        assert min(lens) < 33 and max(lens) >= 64
+
+    @pytest.mark.parametrize("eos", [1, 7])
+    def test_prompts_avoid_eos(self, eos):
+        import dataclasses
+        cfg = dataclasses.replace(CFG, eos_token_id=eos)
+        for t in generate_trace(cfg, 30, seed=10):
+            assert (t.prompt != eos).all()
