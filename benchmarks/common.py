@@ -1,10 +1,12 @@
-"""Shared benchmark plumbing: timing, CSV artefacts, model/lever fixtures."""
+"""Shared benchmark plumbing: timing, CSV artefacts, model/lever fixtures,
+and the one ``--json`` perf-record writer every serving benchmark shares."""
 from __future__ import annotations
 
 import csv
+import json
 import os
 import time
-from typing import Callable, Dict, Iterable, List, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.configs.paper_models import PAPER_MODELS, PARADIGM
 from repro.core import EnergyModel
@@ -13,6 +15,53 @@ from repro.hw import H200_SXM, TPU_V5E
 RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "results/benchmarks")
 
 Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+# ---------------------------------------------------------- bench JSON record
+# version of the committed perf-record layout; bump on breaking field changes
+BENCH_SCHEMA_VERSION = 1
+# field names that vary run-to-run (wall timings) and must never land in the
+# committed record — the JSON stays byte-stable unless serving behaviour
+# actually changed
+VOLATILE_FIELDS = frozenset({"wall_s", "wall_secs", "wall_time_s"})
+
+
+def deterministic_fields(obj: Any, volatile=VOLATILE_FIELDS) -> Any:
+    """Recursively drop volatile (wall-clock) keys from a JSON-able tree."""
+    if isinstance(obj, dict):
+        return {k: deterministic_fields(v, volatile)
+                for k, v in obj.items() if k not in volatile}
+    if isinstance(obj, (list, tuple)):
+        return [deterministic_fields(v, volatile) for v in obj]
+    return obj
+
+
+def write_bench_json(
+    bench: str,
+    results: Any,
+    *,
+    smoke: bool = False,
+    trace: Optional[Dict[str, Any]] = None,
+    extra: Optional[Dict[str, Any]] = None,
+    path: Optional[str] = None,
+    volatile=VOLATILE_FIELDS,
+) -> str:
+    """The shared ``--json`` writer (serve_cluster / serve_trace /
+    serve_fleet): schema-versioned payload, volatile fields filtered, keys
+    sorted — so two identical replays produce byte-identical artefacts."""
+    payload: Dict[str, Any] = {
+        "bench": bench,
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "smoke": smoke,
+        "results": deterministic_fields(results, volatile),
+    }
+    if trace is not None:
+        payload["trace"] = deterministic_fields(trace, volatile)
+    if extra:
+        payload.update(deterministic_fields(extra, volatile))
+    path = path or f"BENCH_{bench}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, sort_keys=True, indent=1)
+    return path
 
 
 def timed(fn: Callable, *args, **kw):

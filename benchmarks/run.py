@@ -20,6 +20,7 @@ def main() -> None:
         policy_bench,
         roofline_report,
         serve_cluster,
+        serve_fleet,
         serve_trace,
         table1_power_cap,
         tpu_native,
@@ -35,6 +36,7 @@ def main() -> None:
         policy_bench,
         serve_cluster,
         serve_trace,
+        serve_fleet,
         tpu_native,
         kernels_micro,
         roofline_report,

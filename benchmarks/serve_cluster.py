@@ -30,7 +30,12 @@ import sys
 
 import jax
 
-from benchmarks.common import h200_model, write_csv
+from benchmarks.common import (
+    VOLATILE_FIELDS,
+    h200_model,
+    write_bench_json,
+    write_csv,
+)
 from repro.configs import get_config, reduced_config
 from repro.models import init_params
 from repro.serving import ClockController, Cluster
@@ -89,7 +94,7 @@ def serve_one(arch: str, mode: str, *, requests=14, batch=12, max_new=8):
     }
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, write_json: bool = False):
     """Harness contract: yields (name, us_per_call, derived) rows; raises if
     the paper's ordering is violated.
 
@@ -150,6 +155,18 @@ def run(smoke: bool = False):
         list(results[0].keys()),
         [[r[k] for k in results[0].keys()] for r in results],
     )
+    if write_json:
+        path = write_bench_json(
+            "serve_cluster",
+            {f"{r['arch']}/{r['mode']}": r for r in results},
+            smoke=smoke,
+            # this benchmark serves on the REAL clock with threaded
+            # samplers: its measured joules are wall-timing-dependent, so
+            # they are volatile here (unlike serve_trace/serve_fleet, whose
+            # virtual-time measurements are deterministic)
+            volatile=VOLATILE_FIELDS | {"measured_prefill_j", "measured_decode_j"},
+        )
+        out_rows.append(("serve_cluster/json", 0.0, f"wrote={path}"))
     if violations:
         raise RuntimeError("; ".join(violations))
     return out_rows
@@ -157,9 +174,10 @@ def run(smoke: bool = False):
 
 def main():
     smoke = "--smoke" in sys.argv[1:]
+    write_json = "--json" in sys.argv[1:]
     ok = True
     try:
-        for name, us, derived in run(smoke=smoke):
+        for name, us, derived in run(smoke=smoke, write_json=write_json):
             print(f"{name},{us:.1f},{derived}")
     except RuntimeError as e:
         print(f"ordering check VIOLATED: {e}")

@@ -37,12 +37,12 @@ import time
 
 import jax
 
-from benchmarks.common import h200_model, write_csv
+from benchmarks.common import h200_model, write_bench_json, write_csv
 from repro.configs import get_config, reduced_config
 from repro.core import VirtualClock, decode_workload, generate_trace, prefill_workload
 from repro.core.latency import summarize_latency
 from repro.models import init_params
-from repro.serving import ClockController, Cluster
+from repro.serving import ClockSpec, Cluster, PoolSpec, ReplicaSpec
 
 ARCHS = ("minicpm-2b", "mamba2-780m")
 MODES = ("default", "cap", "lock", "slo")
@@ -76,22 +76,29 @@ def slo_targets(emodel, full_cfg):
     return tbt_s, ttft_s, UTILISATION * capacity_rps
 
 
+def replica_spec(arch: str, mode: str, tbt_s: float, ttft_s: float) -> ReplicaSpec:
+    """The declarative build: one spec describes the whole replica."""
+    return ReplicaSpec(
+        name=f"{arch}-{mode}",
+        arch=arch,
+        clock=ClockSpec(mode=mode, context=CTX_EST,
+                        slo_tbt_s=tbt_s, slo_ttft_s=ttft_s),
+        decode=PoolSpec(batch=BATCH, paged=True,
+                        kv_block_size=KV_BLOCK_SIZE, kv_blocks=KV_BLOCKS),
+        max_seq_len=MAX_SEQ_LEN,
+        prefill_chunk_tokens=CHUNK_TOKENS,
+    )
+
+
 def replay(arch: str, mode: str, trace, tbt_s: float, ttft_s: float):
     """One virtual-time replay; returns (deterministic metrics, wall secs)."""
-    emodel = h200_model()
     cfg = reduced_config(arch)
-    full = get_config(arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
-    ctl = ClockController(
-        emodel, full, mode=mode, context=CTX_EST,
-        slo_tbt_s=tbt_s, slo_ttft_s=ttft_s,
+    cluster = Cluster.from_spec(
+        replica_spec(arch, mode, tbt_s, ttft_s),
+        emodel=h200_model(), params=params, clock=VirtualClock(),
     )
-    cluster = Cluster(
-        cfg, params, controller=ctl, decode_batch=BATCH,
-        max_seq_len=MAX_SEQ_LEN, prefill_chunk_tokens=CHUNK_TOKENS,
-        clock=VirtualClock(),
-        paged=True, kv_block_size=KV_BLOCK_SIZE, kv_blocks=KV_BLOCKS,
-    )
+    ctl = cluster.controller
     t0 = time.perf_counter()
     done = cluster.run_trace(trace)
     wall_s = time.perf_counter() - t0
@@ -215,17 +222,11 @@ def run(smoke: bool = False, write_json: bool = False):
     keys = list(next(iter(results.values())).keys())
     write_csv("serve_trace", keys, [[r[k] for k in keys] for r in results.values()])
     if write_json:
-        # deterministic fields only (no wall timings): the committed record
-        # stays byte-stable across runs unless serving behaviour changed
-        payload = {
-            "bench": "serve_trace",
-            "smoke": smoke,
-            "trace": {"n": n_requests, "arrival": "poisson",
-                      "lengths": "short_chat", "seed": TRACE_SEED},
-            "results": results,
-        }
-        with open(JSON_PATH, "w") as f:
-            json.dump(payload, f, sort_keys=True, indent=1)
+        write_bench_json(
+            "serve_trace", results, smoke=smoke, path=JSON_PATH,
+            trace={"n": n_requests, "arrival": "poisson",
+                   "lengths": "short_chat", "seed": TRACE_SEED},
+        )
         out_rows.append(("serve_trace/json", 0.0, f"wrote={JSON_PATH}"))
     if violations:
         raise RuntimeError("; ".join(violations))

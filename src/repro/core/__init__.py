@@ -46,6 +46,7 @@ from repro.core.latency import (
     summarize_latency,
 )
 from repro.core.traces import (
+    BUCKETS,
     TracedRequest,
     diurnal_arrivals,
     generate_trace,
@@ -67,7 +68,7 @@ __all__ = [
     "PowerSampler", "PowerTrace", "TrafficCounter", "integrate_trace",
     "VirtualClock",
     "LatencyLedger", "LatencySummary", "percentile", "summarize_latency",
-    "TracedRequest", "generate_trace",
+    "BUCKETS", "TracedRequest", "generate_trace",
     "poisson_arrivals", "onoff_arrivals", "diurnal_arrivals",
     "HypothesisResult", "evaluate_hypotheses",
     "Record", "characterize", "filter_records", "to_csv",

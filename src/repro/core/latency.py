@@ -117,6 +117,13 @@ class LatencySummary:
     p99_e2e_s: float
     mean_ttft_s: float
     mean_tbt_s: float
+    # queue delay (arrival -> admitted): the fraction of TTFT a router or
+    # scheduler owns — fleet routing decisions are invisible without it
+    p50_queue_s: float = 0.0
+    p95_queue_s: float = 0.0
+    p99_queue_s: float = 0.0
+    mean_queue_s: float = 0.0
+    p95_e2e_s: float = 0.0
 
     def meets(self, *, ttft_s: Optional[float] = None,
               tbt_s: Optional[float] = None) -> bool:
@@ -134,6 +141,7 @@ def summarize_latency(requests: Iterable) -> LatencySummary:
     ttfts: List[float] = []
     tbts: List[float] = []
     e2es: List[float] = []
+    queues: List[float] = []
     n_tokens = 0
     n = 0
     for r in requests:
@@ -144,6 +152,8 @@ def summarize_latency(requests: Iterable) -> LatencySummary:
         tbts.extend(led.tbt_s)
         if led.e2e_s is not None:
             e2es.append(led.e2e_s)
+        if led.queue_s is not None:
+            queues.append(led.queue_s)
         n_tokens += len(getattr(r, "output", ()))
     return LatencySummary(
         n_requests=n,
@@ -158,4 +168,9 @@ def summarize_latency(requests: Iterable) -> LatencySummary:
         p99_e2e_s=percentile(e2es, 99),
         mean_ttft_s=float(np.mean(ttfts)) if ttfts else 0.0,
         mean_tbt_s=float(np.mean(tbts)) if tbts else 0.0,
+        p50_queue_s=percentile(queues, 50),
+        p95_queue_s=percentile(queues, 95),
+        p99_queue_s=percentile(queues, 99),
+        mean_queue_s=float(np.mean(queues)) if queues else 0.0,
+        p95_e2e_s=percentile(e2es, 95),
     )

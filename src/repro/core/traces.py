@@ -22,6 +22,11 @@ Length profiles (prompt length x decode budget):
 * ``long_context`` — prompts near the context cap, few new tokens
   (retrieval / summarisation).
 * ``mixed``        — ``mix_long`` fraction long-context, rest short-chat.
+
+Every ``TracedRequest`` carries a **length-bucket tag** (``short``/``long``;
+``mixed`` = unknown, for requests built outside the generator): the profile
+the generator actually drew for it. Fleet routers key arch-affinity off
+this trace-borne tag instead of re-thresholding prompt lengths ad hoc.
 """
 from __future__ import annotations
 
@@ -34,6 +39,9 @@ from repro.models.config import ModelConfig
 
 ARRIVALS = ("poisson", "onoff", "diurnal")
 LENGTHS = ("short_chat", "long_context", "mixed")
+# length-bucket tags: the profile a request was drawn from ("mixed" =
+# unknown provenance — e.g. hand-built requests — routers fall back on it)
+BUCKETS = ("short", "long", "mixed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +52,7 @@ class TracedRequest:
     prompt: np.ndarray                  # (L,) int32 token ids
     max_new_tokens: int
     temperature: float = 0.0
+    bucket: str = "mixed"               # length-bucket tag, see BUCKETS
 
     @property
     def prompt_len(self) -> int:
@@ -120,8 +129,12 @@ def _sample_lengths(
     *,
     max_total_len: int,
     mix_long: float,
-) -> Tuple[int, int]:
-    """One (prompt_len, max_new_tokens) draw; always fits max_total_len."""
+) -> Tuple[int, int, str]:
+    """One (prompt_len, max_new_tokens, bucket) draw; always fits
+    max_total_len. The bucket is the profile actually drawn — for "mixed"
+    the per-request resolution, so routers see trace data, not thresholds.
+    The draw sequence is unchanged from the pre-bucket generator: seeded
+    traces stay byte-identical for every existing profile."""
     if kind == "mixed":
         kind = "long_context" if rng.uniform() < mix_long else "short_chat"
     if kind == "short_chat":
@@ -135,7 +148,7 @@ def _sample_lengths(
     else:
         raise ValueError(f"unknown length profile {kind!r}; have {LENGTHS}")
     new = max(1, min(new, max_total_len - prompt))
-    return prompt, new
+    return prompt, new, ("long" if kind == "long_context" else "short")
 
 
 def generate_trace(
@@ -166,7 +179,7 @@ def generate_trace(
     times = _ARRIVAL_FNS[arrival](n, rate_rps, rng, **(arrival_kwargs or {}))
     out: List[TracedRequest] = []
     for i in range(n):
-        prompt_len, new = _sample_lengths(
+        prompt_len, new, bucket = _sample_lengths(
             lengths, rng, max_total_len=max_total_len, mix_long=mix_long)
         prompt = rng.integers(1, cfg.vocab_size, size=prompt_len).astype(np.int32)
         if cfg.eos_token_id != 0:
@@ -176,5 +189,6 @@ def generate_trace(
             prompt=prompt,
             max_new_tokens=new,
             temperature=temperature,
+            bucket=bucket,
         ))
     return out

@@ -1,15 +1,32 @@
 """Serving substrate: phase pools (dense or paged continuous batching), the
-single-pool engine, and the phase-disaggregated cluster with its
-energy-aware clock controller — wall-clock or virtual-time (trace replay
-with an SLO-regulated DVFS loop)."""
+single-pool engine, the phase-disaggregated cluster, and — spec-first —
+fleets of N heterogeneous replicas behind pluggable routers, each replica
+holding its own energy-aware clock controller on one shared wall or virtual
+timeline (trace replay with an SLO-regulated DVFS loop)."""
 from repro.core.clock import VirtualClock
 from repro.core.latency import LatencyLedger, LatencySummary, summarize_latency
-from repro.core.traces import TracedRequest, generate_trace
-from repro.serving.cluster import Cluster, Scheduler
+from repro.core.traces import BUCKETS, TracedRequest, generate_trace
+from repro.serving.cluster import Cluster
 from repro.serving.controller import ClockController, Transition
 from repro.serving.engine import EOS, PhaseStats, Request, ServingEngine
+from repro.serving.fleet import Fleet, Replica, Scheduler
 from repro.serving.paged_cache import NULL_PAGE, BlockAllocator, TrafficCounter
 from repro.serving.pool import Pool
+from repro.serving.router import (
+    ROUTERS,
+    ArchAffinity,
+    EnergyAware,
+    JoinShortestQueue,
+    Router,
+    make_router,
+)
+from repro.serving.spec import (
+    CLOCK_MODES,
+    ClockSpec,
+    FleetSpec,
+    PoolSpec,
+    ReplicaSpec,
+)
 
 __all__ = [
     "EOS",
@@ -19,6 +36,8 @@ __all__ = [
     "Pool",
     "Cluster",
     "Scheduler",
+    "Replica",
+    "Fleet",
     "ClockController",
     "Transition",
     "BlockAllocator",
@@ -28,6 +47,20 @@ __all__ = [
     "LatencyLedger",
     "LatencySummary",
     "summarize_latency",
+    "BUCKETS",
     "TracedRequest",
     "generate_trace",
+    # spec layer
+    "CLOCK_MODES",
+    "PoolSpec",
+    "ClockSpec",
+    "ReplicaSpec",
+    "FleetSpec",
+    # routing
+    "Router",
+    "ROUTERS",
+    "JoinShortestQueue",
+    "EnergyAware",
+    "ArchAffinity",
+    "make_router",
 ]

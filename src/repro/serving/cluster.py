@@ -1,11 +1,24 @@
-"""Phase-disaggregated serving: prefill pool + decode pool + scheduler.
+"""Phase-disaggregated serving: the single-replica facade over the fleet.
 
 The paper's deployment recipe (§7.1) made executable: prefill and decode
 run on separate pools so each can hold its phase-optimal operating point
 statically — decode never engages a power cap, so only a clock lock can
 save energy there, while prefill genuinely needs the high clock.
 
-Topology::
+Since the fleet refactor all replica machinery — the prefill/decode pool
+pair, chunked-prefill ``Scheduler``, waiting queue, per-replica
+``ClockController`` loop, metering — lives in ``repro.serving.fleet``
+(``Replica``), and trace replay is ``Fleet.run_trace`` (arrival release +
+routing + per-round ticks). ``Cluster`` is the single-replica deployment
+shape kept as a thin facade: the constructor signature, attributes
+(``prefill_pool``/``decode_pool``/``scheduler``/``waiting``) and methods
+(``submit``/``step``/``run_trace``/``run_to_completion``/stats/metering)
+are unchanged from before the fleet existed, and every call delegates to
+one ``Replica`` inside a one-replica ``Fleet``. Multi-replica serving —
+declarative specs, heterogeneous architectures, pluggable routers,
+drain/power-down — is ``repro.serving.spec`` + ``repro.serving.fleet``.
+
+Topology (one replica)::
 
     submit() -> waiting queue
                   |  Scheduler (chunked-prefill admission: a token budget
@@ -17,30 +30,11 @@ Topology::
                   v                                           v
             decode pool   -- one jitted step over ALL slots per tick -->
 
-A ``ClockController`` (optional) ticks before every scheduler step: each
-pool's lever is re-resolved from its live occupancy/context regime, its
-``PowerSampler`` gauge tracks the modelled power of that operating point,
-and per-request prefill/decode joules accumulate at the pool's current
-energy/token. With no controller the cluster still serves — it just runs
-unmetered, like the seed engine did.
-
-With ``paged=True`` the decode pool runs the paged cache (continuous
-batching over a block allocator): admission asks ``can_admit`` — blocks,
-not just slots — the migration scatter becomes a block-table handoff
-(copy-on-migrate into freshly allocated pages), preempted requests come
-back through the queue head, and decode joules derive from the pool's
-block-level ``TrafficCounter`` instead of the shape-based estimate.
-
-With ``clock=VirtualClock()`` the cluster replays in virtual time:
-``run_trace`` releases a seeded arrival trace (``repro.core.traces``) into
-the queue as simulated time crosses each arrival stamp, pools advance the
-shared clock by modelled step durations, idle joules accrue across arrival
-gaps, and every request's ``LatencyLedger`` yields TTFT/TBT percentiles.
-After each decode step the cluster feeds measured latencies back to the
-controller — that closed loop is what ``ClockController(mode="slo")``
-regulates on. A cluster tick serialises admission prefills and the decode
-step on the one shared timeline (the conservative colocated-device view of
-a tick's latency; per-pool overlap is future work).
+With ``clock=VirtualClock()`` the cluster replays in virtual time exactly
+as before: ``run_trace`` releases a seeded arrival trace as simulated time
+crosses each stamp, pools advance the shared clock by modelled step
+durations, idle joules accrue across gaps, and the controller's ``slo``
+mode closes the loop on measured TTFT/TBT percentiles.
 """
 from __future__ import annotations
 
@@ -49,76 +43,14 @@ from typing import Any, Callable, Dict, Iterable, List, Optional
 
 import numpy as np
 
-from repro.core.clock import VirtualClock
 from repro.core.traces import TracedRequest
 from repro.models.config import ModelConfig
 from repro.serving.controller import ClockController
-from repro.serving.pool import (
-    PhaseStats,
-    Pool,
-    Request,
-    head_validator,
-    observe_latencies,
-)
+from repro.serving.fleet import Fleet, Replica, Scheduler
+from repro.serving.pool import PhaseStats, Pool, Request
+from repro.serving.spec import ReplicaSpec
 
-
-class Scheduler:
-    """Chunked-prefill admission with a per-tick prefill token budget.
-
-    Credits accrue ``chunk_tokens`` per tick while requests wait AND a
-    decode slot is free, capped at ``max(chunk_tokens, head prompt
-    length)``; a request is admitted (prefilled + migrated) only once
-    accrued credit covers its prompt. Long prompts therefore spread their
-    prefill admission over several decode ticks — the Sarathi-style
-    interleaving knob — while the queue is drained in FIFO order (several
-    small requests can admit in one tick as long as they fit the chunk
-    budget). The cap plus the reset on an empty queue mean neither an idle
-    cluster nor a full decode pool can bank credit that would later
-    release one giant prefill burst.
-    """
-
-    def __init__(self, chunk_tokens: int = 256):
-        if chunk_tokens < 1:
-            raise ValueError("chunk_tokens must be >= 1")
-        self.chunk_tokens = chunk_tokens
-        self.migrations = 0
-        self._credit = 0.0
-
-    def tick(
-        self,
-        waiting: List[Request],
-        prefill_pool: Pool,
-        decode_pool: Pool,
-    ) -> List[Request]:
-        if not waiting:
-            self._credit = 0.0
-            return []
-        validated_head = head_validator(waiting, decode_pool)
-        # fail fast even when admission is impossible this tick
-        head = validated_head()
-        if decode_pool.can_admit(head):
-            # accrue only while admission is possible, capped at
-            # max(chunk, head need) — a full decode pool must not bank
-            # credit that later releases one giant prefill burst.
-            # can_admit is the continuous-batching gate: on a paged pool it
-            # asks the block allocator, not a fixed slot count.
-            self._credit = min(
-                self._credit + self.chunk_tokens,
-                max(float(self.chunk_tokens), float(len(head.prompt))),
-            )
-        admitted: List[Request] = []
-        while waiting and decode_pool.can_admit(waiting[0]):
-            req = validated_head()
-            need = len(req.prompt)
-            if need > self._credit:
-                break
-            waiting.pop(0)
-            self._credit -= need
-            first, cache1 = prefill_pool.prefill_request(req)
-            decode_pool.place(req, cache1, first, need)
-            self.migrations += 1
-            admitted.append(req)
-        return admitted
+__all__ = ["Cluster", "Scheduler"]
 
 
 class Cluster:
@@ -141,27 +73,70 @@ class Cluster:
         kv_block_size: int = 16,
         kv_blocks: Optional[int] = None,
     ):
-        self.cfg = cfg
-        self.prefill_pool = Pool(
-            cfg, params, role="prefill", max_batch=max(1, prefill_batch),
-            max_seq_len=max_seq_len, rng_seed=rng_seed, clock=clock,
+        self._adopt(Replica(
+            cfg, params, name="replica0", controller=controller,
+            prefill_batch=prefill_batch, decode_batch=decode_batch,
+            max_seq_len=max_seq_len,
+            prefill_chunk_tokens=prefill_chunk_tokens, rng_seed=rng_seed,
+            clock=clock, meter_interval_s=meter_interval_s, paged=paged,
+            kv_block_size=kv_block_size, kv_blocks=kv_blocks,
+        ))
+
+    def _adopt(self, replica: Replica):
+        self._replica = replica
+        self._fleet = Fleet([replica])
+
+    @classmethod
+    def from_spec(
+        cls,
+        spec: ReplicaSpec,
+        *,
+        emodel=None,
+        params: Any = None,
+        clock: Callable[[], float] = time.perf_counter,
+        meter_interval_s: float = 0.050,
+    ) -> "Cluster":
+        """Build the single-replica cluster from a declarative spec (the
+        same ``ReplicaSpec`` a ``FleetSpec`` carries N of)."""
+        self = cls.__new__(cls)
+        self._adopt(Replica.from_spec(
+            spec, emodel=emodel, clock=clock, params=params,
             meter_interval_s=meter_interval_s,
-        )
-        # only the decode pool pages its cache: prefill is batch-1 scratch
-        # whose row is handed off (copy-on-migrate) at admission
-        self.decode_pool = Pool(
-            cfg, params, role="decode", max_batch=decode_batch,
-            max_seq_len=max_seq_len, rng_seed=rng_seed, clock=clock,
-            meter_interval_s=meter_interval_s,
-            paged=paged, kv_block_size=kv_block_size, kv_blocks=kv_blocks,
-        )
-        self.controller = controller
-        self.scheduler = Scheduler(prefill_chunk_tokens)
-        self.clock = clock
-        self.virtual = isinstance(clock, VirtualClock)
-        self.waiting: List[Request] = []
-        self._uid = 0
-        self._step_no = 0
+        ))
+        return self
+
+    # ----------------------------------------------------- replica plumbing
+    @property
+    def cfg(self) -> ModelConfig:
+        return self._replica.cfg
+
+    @property
+    def prefill_pool(self) -> Pool:
+        return self._replica.prefill_pool
+
+    @property
+    def decode_pool(self) -> Pool:
+        return self._replica.decode_pool
+
+    @property
+    def controller(self) -> Optional[ClockController]:
+        return self._replica.controller
+
+    @property
+    def scheduler(self) -> Scheduler:
+        return self._replica.scheduler
+
+    @property
+    def clock(self) -> Callable[[], float]:
+        return self._replica.clock
+
+    @property
+    def virtual(self) -> bool:
+        return self._replica.virtual
+
+    @property
+    def waiting(self) -> List[Request]:
+        return self._replica.waiting
 
     # ------------------------------------------------------------------ api
     def submit(
@@ -176,135 +151,60 @@ class Cluster:
         """Queue a request. ``arrival_s`` overrides the arrival stamp (the
         trace replay passes the trace's own timestamp so queueing delay that
         happened *during* a long step is still charged to TTFT)."""
-        req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens,
-                      temperature=temperature, eos_token_id=eos_token_id)
-        req.ledger.mark_arrival(self.clock() if arrival_s is None else arrival_s)
-        self._uid += 1
-        self.waiting.append(req)
-        return req
+        return self._replica.submit(
+            prompt, max_new_tokens, temperature=temperature,
+            eos_token_id=eos_token_id, arrival_s=arrival_s,
+        )
 
     def pools(self) -> Dict[str, Pool]:
-        return {"prefill": self.prefill_pool, "decode": self.decode_pool}
+        return self._replica.pools()
 
     def step(self) -> List[Request]:
         """One cluster tick: retune clocks, admit/migrate, decode."""
-        self._step_no += 1
-        if self.controller is not None:
-            self.controller.tick(self.pools(), self._step_no)
-        admitted = self.scheduler.tick(self.waiting, self.prefill_pool, self.decode_pool)
-        if self.controller is not None and admitted:
-            # admission changed decode occupancy: re-resolve so this step's
-            # tokens are priced at the true post-admission operating point
-            self.controller.tick(self.pools(), self._step_no)
-        finished = self.decode_pool.decode_once()
-        if self.controller is not None:
-            observe_latencies(self.controller, self.decode_pool, admitted, finished)
-        # preempted requests go back to the queue head: they are the oldest
-        # work in flight, and FIFO admission re-prefills them first
-        evicted = self.decode_pool.take_evicted()
-        if evicted:
-            self.waiting[:0] = evicted
-        return finished
+        return self._replica.step()
 
     def busy(self) -> bool:
-        return bool(self.waiting) or self.decode_pool.occupancy() > 0
+        return self._replica.busy()
 
     # -------------------------------------------------------- trace replay
-    def _advance_idle(self, dt_s: float):
-        """Cross an idle gap between trace arrivals. Virtual: jump the
-        shared clock and sample both pools so idle-floor joules accrue over
-        the gap; wall: actually wait it out."""
-        if dt_s <= 0:
-            return
-        if self.virtual:
-            self.clock.advance(dt_s)
-            for pool in self.pools().values():
-                pool.sample_now()
-        else:
-            time.sleep(dt_s)
-
     def run_trace(
         self,
         trace: Iterable[TracedRequest],
         *,
         max_steps: int = 1000000,
     ) -> List[Request]:
-        """Replay an arrival trace: each entry enters the waiting queue when
-        the serving clock crosses its ``arrival_s`` (relative to replay
-        start). With a ``VirtualClock`` the whole replay is deterministic —
-        service time is the modelled step time at each pool's live
-        operating point, and idle joules accrue across arrival gaps.
-        """
-        if self.virtual and self.controller is None:
-            raise ValueError(
-                "virtual-time replay needs a ClockController: without an "
-                "operating point the pools cannot model step durations")
-        pending = sorted(trace, key=lambda t: t.arrival_s)
-        t_start = self.clock()
-        done: List[Request] = []
-        i = 0
-        steps = 0
-        self.start_metering()
-        try:
-            while (i < len(pending) or self.busy()) and steps < max_steps:
-                now = self.clock() - t_start
-                while i < len(pending) and pending[i].arrival_s <= now:
-                    t = pending[i]
-                    i += 1
-                    self.submit(t.prompt, t.max_new_tokens,
-                                temperature=t.temperature,
-                                arrival_s=t_start + t.arrival_s)
-                if not self.busy():
-                    if i >= len(pending):
-                        break
-                    # nothing in flight: idle until the next arrival
-                    self._advance_idle(pending[i].arrival_s - now)
-                    continue
-                done.extend(self.step())
-                steps += 1
-        finally:
-            self.stop_metering()
-        return done
+        """Replay an arrival trace on the one replica — subsumed by (and
+        delegated to) ``Fleet.run_trace``."""
+        return self._fleet.run_trace(trace, max_steps=max_steps)
 
     def run_to_completion(self, max_steps: int = 100000) -> List[Request]:
-        done: List[Request] = []
-        steps = 0
-        self.start_metering()
-        try:
-            while self.busy() and steps < max_steps:
-                done.extend(self.step())
-                steps += 1
-        finally:
-            self.stop_metering()
-        return done
+        return self._replica.run_to_completion(max_steps=max_steps)
 
     # ------------------------------------------------------------- metering
     def start_metering(self):
-        for pool in self.pools().values():
-            pool.start_metering()
+        self._replica.start_metering()
 
     def stop_metering(self) -> Dict[str, float]:
         """Stop both samplers; return cumulative joules per pool."""
-        return {name: p.stop_metering() for name, p in self.pools().items()}
+        return self._replica.stop_metering()
 
     def measured_energy_j(self) -> Dict[str, float]:
         """Cumulative per-pool joules across all runs — same lifetime scope
         as ``stats``, so measured and modelled energy stay comparable even
         when the cluster is run in several batches."""
-        return {name: p.measured_energy_j() for name, p in self.pools().items()}
+        return self._replica.measured_energy_j()
 
     # ----------------------------------------------------------------- stats
     @property
     def prefill_stats(self) -> PhaseStats:
-        return self.prefill_pool.stats
+        return self._replica.prefill_stats
 
     @property
     def decode_stats(self) -> PhaseStats:
-        return self.decode_pool.stats
+        return self._replica.decode_stats
 
     @property
     def stats(self) -> PhaseStats:
         """Cluster-wide phase totals (clock fields are the decode pool's —
         the phase the paper's capping claim is about)."""
-        return self.decode_pool.stats.merged_with(self.prefill_pool.stats)
+        return self._replica.stats

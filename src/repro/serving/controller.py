@@ -70,6 +70,10 @@ class ClockController:
         prefill_seq: int = 4096,
         cap_w: Optional[float] = None,
         fused: bool = False,
+        context_scale: float = 1.0,          # each live trace token stands
+                                             # for this many production
+                                             # tokens when pricing workloads
+                                             # (miniature-trace replays)
         # ---- slo mode: p99 targets + walk dynamics -----------------------
         slo_ttft_s: float = 2.0,
         slo_tbt_s: float = 0.25,
@@ -92,6 +96,9 @@ class ClockController:
         self.prefill_seq = prefill_seq
         self.cap_w = cap_w if cap_w is not None else min(emodel.spec.power_cap_levels)
         self.fused = fused
+        if context_scale <= 0:
+            raise ValueError("context_scale must be > 0")
+        self.context_scale = context_scale
         self.slo_ttft_s = slo_ttft_s
         self.slo_tbt_s = slo_tbt_s
         self.slo_slack = slo_slack
@@ -234,9 +241,35 @@ class ClockController:
 
         Pure probe used by tests/benchmarks — no pool state is touched.
         """
-        ctx = self.context if mean_context is None else mean_context
+        ctx = self.context if mean_context is None else mean_context * self.context_scale
         regime = self.regime_for("decode", occupancy, ctx)
         return self.emodel.spec.effective_lock(self.row.clock_for(regime))
+
+    def request_energy_mj(self, prompt_tokens: int, decode_tokens: int,
+                          bucket: str = "mixed") -> float:
+        """Modelled millijoules to serve one request of this length profile
+        at the bucket's policy column — the fleet router's arch-affinity
+        signal. Prefill is priced at the prefill lock, decode at the batched
+        column matching the bucket (``long`` -> the long-context regime,
+        where the recurrent archs' flat energy curves win). Both phases
+        count: an arch with cheap flat decode but a brutal prefill scan must
+        not win long-prompt traffic on decode numbers alone. Contexts here
+        are already absolute (production-scale), so ``context_scale`` does
+        not apply."""
+        regime = "bs32_long" if bucket == "long" else "bs32"
+        ctx = self.long_context if bucket == "long" else self.context
+        dec = resolve(
+            self.emodel,
+            decode_workload(self.arch_cfg, 32, int(ctx), fused=self.fused),
+            self.lever_for(regime),
+        )
+        pre = resolve(
+            self.emodel,
+            prefill_workload(self.arch_cfg, 1, self.prefill_seq, fused=self.fused),
+            self.lever_for("prefill"),
+        )
+        return (prompt_tokens * pre.profile.energy_per_token_mj
+                + decode_tokens * dec.profile.energy_per_token_mj)
 
     # ----------------------------------------------------------- the closure
     def _resolve(self, role: str, occupancy: int, mean_context: float,
@@ -250,16 +283,19 @@ class ClockController:
         return resolve(self.emodel, w, lever)
 
     def operating_point(self, role: str, occupancy: int, mean_context: float) -> OperatingPoint:
-        """Regime + lever + resolve in one call (probe/test convenience)."""
-        lever = self.lever_for(self.regime_for(role, occupancy, mean_context))
-        return self._resolve(role, occupancy, mean_context, lever)
+        """Regime + lever + resolve in one call (probe/test convenience).
+        ``mean_context`` is live (pool-scale) tokens; ``context_scale``
+        converts it to the production-scale context being modelled."""
+        ctx = mean_context * self.context_scale
+        lever = self.lever_for(self.regime_for(role, occupancy, ctx))
+        return self._resolve(role, occupancy, ctx, lever)
 
     def tick(self, pools: Mapping[str, "Pool"], step: int):  # noqa: F821
         """Apply the regime-matched lever to every pool; record transitions."""
         slo_walked = False
         for name, pool in pools.items():
             occ = pool.occupancy()
-            ctx = pool.mean_context()
+            ctx = pool.mean_context() * self.context_scale
             regime = self.regime_for(pool.role, occ, ctx)
             if self.mode == "slo" and regime != "prefill" and not slo_walked:
                 # one walk step per tick, against the live decode regime

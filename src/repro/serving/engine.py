@@ -30,6 +30,7 @@ from repro.serving.pool import (
     head_validator,
     observe_latencies,
 )
+from repro.serving.spec import ReplicaSpec
 
 __all__ = ["EOS", "PhaseStats", "Request", "ServingEngine"]
 
@@ -65,6 +66,44 @@ class ServingEngine:
         self.waiting: List[Request] = []
         self._uid = 0
         self._step_no = 0
+
+    @classmethod
+    def from_spec(
+        cls,
+        spec: ReplicaSpec,
+        *,
+        emodel=None,
+        params: Any = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ) -> "ServingEngine":
+        """Build the colocated engine from a declarative spec: the decode
+        ``PoolSpec`` sizes the one mixed-phase pool (a colocated deployment
+        has no separate prefill pool to budget), and ``spec.clock`` builds
+        the controller against the FULL config's policy table."""
+        import jax
+
+        from repro.configs import get_config, reduced_config
+        from repro.core.energy import EnergyModel
+        from repro.hw import H200_SXM
+        from repro.models import init_params
+
+        emodel = emodel if emodel is not None else EnergyModel(H200_SXM)
+        full = get_config(spec.arch)
+        cfg = reduced_config(spec.arch) if spec.reduced else full
+        if params is None:
+            params = init_params(cfg, jax.random.PRNGKey(spec.rng_seed))
+        controller = ClockController(emodel, full, **spec.clock.controller_kwargs())
+        return cls(
+            cfg, params,
+            max_batch=spec.decode.batch,
+            max_seq_len=spec.max_seq_len,
+            rng_seed=spec.rng_seed,
+            clock=clock,
+            controller=controller,
+            paged=spec.decode.paged,
+            kv_block_size=spec.decode.kv_block_size,
+            kv_blocks=spec.decode.kv_blocks,
+        )
 
     # ------------------------------------------------------------------ api
     @property

@@ -1,0 +1,599 @@
+"""Fleet serving: N prefill/decode replicas behind a pluggable router.
+
+The paper's per-architecture DVFS policy table becomes a *serving* lever at
+fleet scale: with replicas of different architectures behind one router,
+"send long-context traffic to the arch with the flattest energy curve" and
+"power a replica down between bursts instead of underclocking all of them"
+are schedulable decisions, not table rows. This module holds the two
+runtime pieces of the spec-first fleet API (``repro.serving.spec``):
+
+* ``Replica`` — one prefill/decode pool pair with its own ``Scheduler``,
+  waiting queue and ``ClockController`` (each replica walks its own SLO
+  loop). This is exactly the machinery ``Cluster`` used to hard-wire; the
+  cluster is now a thin single-replica facade over it. Replicas add the
+  drain/power gating a fleet needs: ``drain()`` stops new placements while
+  in-flight work finishes, ``power_down()`` zeroes the idle floor so a
+  parked replica accrues NO joules (not even idle watts), ``power_up()``
+  rejoins the routable set.
+* ``Fleet`` — the replica set plus a ``Router`` (``repro.serving.router``).
+  ``Fleet.run_trace`` subsumes ``Cluster.run_trace``: arrivals release as
+  the serving clock crosses their stamps, the router picks each request's
+  replica, and every busy replica takes one tick per round.
+
+Timeline model: replicas are separate devices, so they tick CONCURRENTLY —
+in virtual mode each replica advances its own ``VirtualClock`` through its
+tick, and the fleet syncs all clocks to the round maximum at a barrier
+(idle and faster replicas burn their gauge power across the lag, so a
+powered-up replica is never free — what makes power-down-vs-underclock an
+honest comparison). One fleet round therefore costs the *slowest busy
+replica's* tick, not the sum. WITHIN a replica, admission prefills and the
+decode step still serialise on its clock — PR 3's conservative
+colocated-device view; overlapped per-pool timelines stay on the roadmap.
+A fleet built around one shared clock (the single-replica ``Cluster``
+facade) degenerates to exactly the pre-fleet behaviour.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional
+
+import numpy as np
+
+from repro.core.clock import VirtualClock
+from repro.core.traces import TracedRequest
+from repro.models.config import ModelConfig
+from repro.serving.controller import ClockController
+from repro.serving.pool import (
+    PhaseStats,
+    Pool,
+    Request,
+    head_validator,
+    observe_latencies,
+)
+from repro.serving.router import JoinShortestQueue, Router, make_router
+from repro.serving.spec import FleetSpec, ReplicaSpec
+
+
+class Scheduler:
+    """Chunked-prefill admission with a per-tick prefill token budget.
+
+    Credits accrue ``chunk_tokens`` per tick while requests wait AND a
+    decode slot is free, capped at ``max(chunk_tokens, head prompt
+    length)``; a request is admitted (prefilled + migrated) only once
+    accrued credit covers its prompt. Long prompts therefore spread their
+    prefill admission over several decode ticks — the Sarathi-style
+    interleaving knob — while the queue is drained in FIFO order (several
+    small requests can admit in one tick as long as they fit the chunk
+    budget). The cap plus the reset on an empty queue mean neither an idle
+    cluster nor a full decode pool can bank credit that would later
+    release one giant prefill burst.
+    """
+
+    def __init__(self, chunk_tokens: int = 256):
+        if chunk_tokens < 1:
+            raise ValueError("chunk_tokens must be >= 1")
+        self.chunk_tokens = chunk_tokens
+        self.migrations = 0
+        self._credit = 0.0
+
+    def tick(
+        self,
+        waiting: List[Request],
+        prefill_pool: Pool,
+        decode_pool: Pool,
+    ) -> List[Request]:
+        if not waiting:
+            self._credit = 0.0
+            return []
+        validated_head = head_validator(waiting, decode_pool)
+        # fail fast even when admission is impossible this tick
+        head = validated_head()
+        if decode_pool.can_admit(head):
+            # accrue only while admission is possible, capped at
+            # max(chunk, head need) — a full decode pool must not bank
+            # credit that later releases one giant prefill burst.
+            # can_admit is the continuous-batching gate: on a paged pool it
+            # asks the block allocator, not a fixed slot count.
+            self._credit = min(
+                self._credit + self.chunk_tokens,
+                max(float(self.chunk_tokens), float(len(head.prompt))),
+            )
+        admitted: List[Request] = []
+        while waiting and decode_pool.can_admit(waiting[0]):
+            req = validated_head()
+            need = len(req.prompt)
+            if need > self._credit:
+                break
+            waiting.pop(0)
+            self._credit -= need
+            first, cache1 = prefill_pool.prefill_request(req)
+            decode_pool.place(req, cache1, first, need)
+            self.migrations += 1
+            admitted.append(req)
+        return admitted
+
+
+class Replica:
+    """One disaggregated prefill/decode pair: a fleet's unit of placement."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        *,
+        name: str = "replica0",
+        controller: Optional[ClockController] = None,
+        prefill_batch: int = 1,
+        decode_batch: int = 8,
+        max_seq_len: int = 4096,
+        prefill_chunk_tokens: int = 256,
+        rng_seed: int = 0,
+        clock: Callable[[], float] = time.perf_counter,
+        meter_interval_s: float = 0.050,
+        paged: bool = False,
+        kv_block_size: int = 16,
+        kv_blocks: Optional[int] = None,
+    ):
+        self.cfg = cfg
+        self.name = name
+        self.arch = cfg.name
+        self.prefill_pool = Pool(
+            cfg, params, role="prefill", max_batch=max(1, prefill_batch),
+            max_seq_len=max_seq_len, rng_seed=rng_seed, clock=clock,
+            meter_interval_s=meter_interval_s,
+        )
+        # only the decode pool pages its cache: prefill is batch-1 scratch
+        # whose row is handed off (copy-on-migrate) at admission
+        self.decode_pool = Pool(
+            cfg, params, role="decode", max_batch=decode_batch,
+            max_seq_len=max_seq_len, rng_seed=rng_seed, clock=clock,
+            meter_interval_s=meter_interval_s,
+            paged=paged, kv_block_size=kv_block_size, kv_blocks=kv_blocks,
+        )
+        self.controller = controller
+        self.scheduler = Scheduler(prefill_chunk_tokens)
+        self.clock = clock
+        self.virtual = isinstance(clock, VirtualClock)
+        self.waiting: List[Request] = []
+        self.draining = False
+        self.powered = True
+        self._uid = 0
+        self._step_no = 0
+        if controller is not None:
+            # a powered-up replica is never free: prime the idle floor so
+            # intervals before the first controller tick (and replicas the
+            # router never touches) still burn idle watts
+            for pool in self.pools().values():
+                pool.set_idle_power(controller.emodel.spec.p_idle)
+
+    # -------------------------------------------------------------- builders
+    @classmethod
+    def from_spec(
+        cls,
+        spec: ReplicaSpec,
+        *,
+        emodel=None,
+        clock: Callable[[], float] = time.perf_counter,
+        params: Any = None,
+        meter_interval_s: float = 0.050,
+    ) -> "Replica":
+        """Build a live replica from a declarative spec. ``params`` may be
+        shared across replicas of the same arch; when omitted they are
+        initialised from ``spec.rng_seed``. The controller's policy table
+        always resolves the FULL config; ``spec.reduced`` only picks the
+        config the pools execute."""
+        import jax
+
+        from repro.configs import get_config, reduced_config
+        from repro.core.energy import EnergyModel
+        from repro.hw import H200_SXM
+        from repro.models import init_params
+
+        emodel = emodel if emodel is not None else EnergyModel(H200_SXM)
+        full = get_config(spec.arch)
+        cfg = reduced_config(spec.arch) if spec.reduced else full
+        if params is None:
+            params = init_params(cfg, jax.random.PRNGKey(spec.rng_seed))
+        controller = ClockController(emodel, full, **spec.clock.controller_kwargs())
+        return cls(
+            cfg, params,
+            name=spec.name,
+            controller=controller,
+            prefill_batch=spec.prefill.batch,
+            decode_batch=spec.decode.batch,
+            max_seq_len=spec.max_seq_len,
+            prefill_chunk_tokens=spec.prefill_chunk_tokens,
+            rng_seed=spec.rng_seed,
+            clock=clock,
+            meter_interval_s=meter_interval_s,
+            paged=spec.decode.paged,
+            kv_block_size=spec.decode.kv_block_size,
+            kv_blocks=spec.decode.kv_blocks,
+        )
+
+    # ------------------------------------------------------------------ api
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int = 32,
+        *,
+        temperature: float = 0.0,
+        eos_token_id: Optional[int] = None,
+        arrival_s: Optional[float] = None,
+        bucket: str = "mixed",
+    ) -> Request:
+        """Queue a request. ``arrival_s`` overrides the arrival stamp (the
+        trace replay passes the trace's own timestamp so queueing delay that
+        happened *during* a long step is still charged to TTFT)."""
+        req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens,
+                      temperature=temperature, eos_token_id=eos_token_id,
+                      bucket=bucket, replica=self.name)
+        req.ledger.mark_arrival(self.clock() if arrival_s is None else arrival_s)
+        self._uid += 1
+        self.waiting.append(req)
+        return req
+
+    def pools(self) -> Dict[str, Pool]:
+        return {"prefill": self.prefill_pool, "decode": self.decode_pool}
+
+    def step(self) -> List[Request]:
+        """One replica tick: retune clocks, admit/migrate, decode."""
+        self._step_no += 1
+        if self.controller is not None:
+            self.controller.tick(self.pools(), self._step_no)
+        admitted = self.scheduler.tick(self.waiting, self.prefill_pool, self.decode_pool)
+        if self.controller is not None and admitted:
+            # admission changed decode occupancy: re-resolve so this step's
+            # tokens are priced at the true post-admission operating point
+            self.controller.tick(self.pools(), self._step_no)
+        finished = self.decode_pool.decode_once()
+        if self.controller is not None:
+            observe_latencies(self.controller, self.decode_pool, admitted, finished)
+        # preempted requests go back to the queue head: they are the oldest
+        # work in flight, and FIFO admission re-prefills them first
+        evicted = self.decode_pool.take_evicted()
+        if evicted:
+            self.waiting[:0] = evicted
+        return finished
+
+    def busy(self) -> bool:
+        return bool(self.waiting) or self.decode_pool.occupancy() > 0
+
+    def queue_depth(self) -> int:
+        """Waiting + in-flight work: the router's load signal."""
+        return len(self.waiting) + self.decode_pool.occupancy()
+
+    def run_to_completion(self, max_steps: int = 100000) -> List[Request]:
+        done: List[Request] = []
+        steps = 0
+        self.start_metering()
+        try:
+            while self.busy() and steps < max_steps:
+                done.extend(self.step())
+                steps += 1
+        finally:
+            self.stop_metering()
+        return done
+
+    # ------------------------------------------------- drain / power gating
+    def routable(self) -> bool:
+        """May the router place NEW work here?"""
+        return self.powered and not self.draining
+
+    def drain(self):
+        """Stop accepting new placements; in-flight work keeps serving.
+        The fleet powers a drained replica down once it runs dry — an
+        already-idle replica parks immediately (no idle-floor accrual
+        between the drain decision and the next round)."""
+        self.draining = True
+        if self.powered and not self.busy():
+            self.power_down()
+
+    def power_down(self):
+        """Park an idle replica at zero watts: no operating point, no idle
+        floor — the ``drain -> power down`` alternative to underclocking.
+        Refuses while work is queued or in flight (drain first)."""
+        if self.busy():
+            raise RuntimeError(
+                f"power_down on busy replica {self.name!r} — drain it first")
+        self.powered = False
+        for pool in self.pools().values():
+            pool.set_idle_power(0.0)
+
+    def power_up(self):
+        """Rejoin the routable set; the idle floor is restored immediately
+        (power-up is never free, even before work arrives)."""
+        self.powered = True
+        self.draining = False
+        if self.controller is not None:
+            for pool in self.pools().values():
+                pool.set_idle_power(self.controller.emodel.spec.p_idle)
+
+    # ------------------------------------------------------------- metering
+    def start_metering(self):
+        for pool in self.pools().values():
+            pool.start_metering()
+
+    def stop_metering(self) -> Dict[str, float]:
+        """Stop both samplers; return cumulative joules per pool."""
+        return {name: p.stop_metering() for name, p in self.pools().items()}
+
+    def measured_energy_j(self) -> Dict[str, float]:
+        """Cumulative per-pool joules across all runs — same lifetime scope
+        as ``stats``, so measured and modelled energy stay comparable even
+        when the replica is run in several batches."""
+        return {name: p.measured_energy_j() for name, p in self.pools().items()}
+
+    def sample_pools(self):
+        """Record a synchronous power sample on both pools at the current
+        clock (the fleet calls this after advancing across idle gaps)."""
+        for pool in self.pools().values():
+            pool.sample_now()
+
+    # ----------------------------------------------------------------- stats
+    @property
+    def prefill_stats(self) -> PhaseStats:
+        return self.prefill_pool.stats
+
+    @property
+    def decode_stats(self) -> PhaseStats:
+        return self.decode_pool.stats
+
+    @property
+    def stats(self) -> PhaseStats:
+        """Replica-wide phase totals (clock fields are the decode pool's —
+        the phase the paper's capping claim is about)."""
+        return self.decode_pool.stats.merged_with(self.prefill_pool.stats)
+
+
+class Fleet:
+    """N replicas sharing one serving clock, behind a routing policy."""
+
+    def __init__(
+        self,
+        replicas: Iterable[Replica],
+        *,
+        router: Optional[Router] = None,
+    ):
+        self.replicas: List[Replica] = list(replicas)
+        if not self.replicas:
+            raise ValueError("a Fleet needs at least one replica")
+        names = [r.name for r in self.replicas]
+        if len(set(names)) != len(names):
+            raise ValueError(f"replica names must be unique, got {names}")
+        virtuals = {r.virtual for r in self.replicas}
+        if len(virtuals) != 1:
+            raise ValueError("fleet replicas must be all-virtual or all-wall")
+        self.virtual = virtuals.pop()
+        if not self.virtual and len({id(r.clock) for r in self.replicas}) != 1:
+            # wall-clock replicas tick on real time; only one process clock
+            # keeps their ledgers on one timeline
+            raise ValueError("wall-clock fleet replicas must share one clock")
+        # virtual replicas may share one clock (the single-replica Cluster
+        # facade: ticks serialise, exactly the pre-fleet behaviour) or hold
+        # one VirtualClock each (true device concurrency); the round barrier
+        # keeps either arrangement on one fleet timeline
+        self.clock = self.replicas[0].clock
+        self.router: Router = router if router is not None else JoinShortestQueue()
+        self.by_name: Dict[str, Replica] = {r.name: r for r in self.replicas}
+
+    # -------------------------------------------------------------- builder
+    @classmethod
+    def from_spec(
+        cls,
+        spec: FleetSpec,
+        *,
+        emodel=None,
+        clock: Optional[Callable[[], float]] = None,
+        params_for: Optional[Mapping[str, Any]] = None,
+        meter_interval_s: float = 0.050,
+    ) -> "Fleet":
+        """Build N live replicas + the router from a declarative spec.
+
+        ``clock`` defaults to a fresh ``VirtualClock`` (the fleet harness is
+        trace-replay-first); ``params_for`` maps arch name -> params so
+        same-arch replicas (and repeated builds in a benchmark) can share
+        one initialisation instead of paying it per replica.
+        """
+        if clock is None:
+            # one VirtualClock per replica: separate devices, concurrent
+            # ticks, barrier-synced by the fleet round
+            clocks: List[Callable[[], float]] = [
+                VirtualClock() for _ in spec.replicas]
+        else:
+            clocks = [clock] * len(spec.replicas)
+        params_for = params_for or {}
+        replicas = [
+            Replica.from_spec(
+                rs, emodel=emodel, clock=c,
+                params=params_for.get(rs.arch),
+                meter_interval_s=meter_interval_s,
+            )
+            for rs, c in zip(spec.replicas, clocks)
+        ]
+        return cls(replicas, router=make_router(spec.router, **spec.router_args))
+
+    # ------------------------------------------------------------------ api
+    def route(self, *, prompt_len: int, max_new_tokens: int,
+              bucket: str = "mixed") -> Replica:
+        """Ask the router for this request's replica (routable ones only;
+        with everything drained, powered-up replicas are the fallback)."""
+        candidates = [r for r in self.replicas if r.routable()]
+        if not candidates:
+            candidates = [r for r in self.replicas if r.powered]
+        if not candidates:
+            raise RuntimeError("no powered replica to route to — power_up first")
+        return self.router.route(candidates, prompt_len=prompt_len,
+                                 max_new_tokens=max_new_tokens, bucket=bucket)
+
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int = 32,
+        *,
+        temperature: float = 0.0,
+        eos_token_id: Optional[int] = None,
+        arrival_s: Optional[float] = None,
+        bucket: str = "mixed",
+    ) -> Request:
+        """Route + queue one request; returns the stamped ``Request``
+        (its ``replica`` field records the placement)."""
+        prompt = np.asarray(prompt, np.int32)
+        replica = self.route(prompt_len=len(prompt),
+                             max_new_tokens=max_new_tokens, bucket=bucket)
+        return replica.submit(prompt, max_new_tokens, temperature=temperature,
+                              eos_token_id=eos_token_id, arrival_s=arrival_s,
+                              bucket=bucket)
+
+    def busy(self) -> bool:
+        return any(r.busy() for r in self.replicas)
+
+    def now_s(self) -> float:
+        """The fleet timeline's current time. Replica clocks agree at round
+        barriers; between them the furthest-ahead replica defines "now"."""
+        if self.virtual:
+            return max(r.clock.now_s for r in self.replicas)
+        return self.clock()
+
+    def _sync_round(self):
+        """Barrier: pull every lagging replica clock up to the round's
+        maximum, sampling its pools so the lag integrates at gauge power —
+        op power while slots are live, the idle floor (or a powered-down
+        replica's zero watts) otherwise. With one shared clock this is a
+        no-op and ticks stay serialised (the Cluster facade's behaviour)."""
+        if not self.virtual:
+            return
+        t1 = max(r.clock.now_s for r in self.replicas)
+        for r in self.replicas:
+            if r.clock.now_s < t1:
+                r.clock.advance_to(t1)
+                r.sample_pools()
+
+    def step(self) -> List[Request]:
+        """One fleet round — the single definition of round semantics, also
+        the body of ``run_trace``/``run_to_completion``: every busy replica
+        takes one concurrent tick (each on its own clock), the barrier
+        re-syncs the timeline, then drained replicas that ran dry power
+        off."""
+        finished: List[Request] = []
+        for r in self.replicas:
+            if r.busy():
+                finished.extend(r.step())
+        self._sync_round()
+        self._power_down_drained()
+        return finished
+
+    def drain(self, name: str):
+        self.by_name[name].drain()
+
+    def power_up(self, name: str):
+        self.by_name[name].power_up()
+
+    def _power_down_drained(self):
+        for r in self.replicas:
+            if r.draining and r.powered and not r.busy():
+                r.power_down()
+
+    # -------------------------------------------------------- trace replay
+    def _advance_idle(self, dt_s: float):
+        """Cross an idle gap between trace arrivals. Virtual: jump every
+        replica clock to the gap's end and sample its pools so idle-floor
+        joules accrue over the gap (zero on powered-down replicas); wall:
+        actually wait it out."""
+        if dt_s <= 0:
+            return
+        if self.virtual:
+            target = self.now_s() + dt_s
+            for r in self.replicas:
+                r.clock.advance_to(target)
+                r.sample_pools()
+        else:
+            time.sleep(dt_s)
+
+    def run_trace(
+        self,
+        trace: Iterable[TracedRequest],
+        *,
+        max_steps: int = 1000000,
+    ) -> List[Request]:
+        """Replay an arrival trace across the fleet: each entry joins the
+        router-chosen replica's queue when the serving clock crosses its
+        ``arrival_s`` (relative to replay start). With a ``VirtualClock``
+        the whole replay is deterministic — service time is the modelled
+        step time at each pool's live operating point, and idle joules
+        accrue across arrival gaps on every powered replica.
+        """
+        if self.virtual and any(r.controller is None for r in self.replicas):
+            raise ValueError(
+                "virtual-time replay needs a ClockController: without an "
+                "operating point the pools cannot model step durations")
+        pending = sorted(trace, key=lambda t: t.arrival_s)
+        t_start = self.now_s()
+        done: List[Request] = []
+        i = 0
+        steps = 0
+        self.start_metering()
+        try:
+            while (i < len(pending) or self.busy()) and steps < max_steps:
+                now = self.now_s() - t_start
+                while i < len(pending) and pending[i].arrival_s <= now:
+                    t = pending[i]
+                    i += 1
+                    self.submit(t.prompt, t.max_new_tokens,
+                                temperature=t.temperature,
+                                arrival_s=t_start + t.arrival_s,
+                                bucket=t.bucket)
+                if not self.busy():
+                    if i >= len(pending):
+                        break
+                    # nothing in flight anywhere: idle until the next arrival
+                    self._advance_idle(pending[i].arrival_s - now)
+                    continue
+                steps += sum(r.busy() for r in self.replicas)
+                done.extend(self.step())
+        finally:
+            self.stop_metering()
+        return done
+
+    def run_to_completion(self, max_steps: int = 100000) -> List[Request]:
+        done: List[Request] = []
+        steps = 0
+        self.start_metering()
+        try:
+            while self.busy() and steps < max_steps:
+                steps += sum(r.busy() for r in self.replicas)
+                done.extend(self.step())
+        finally:
+            self.stop_metering()
+        return done
+
+    # ------------------------------------------------------------- metering
+    def start_metering(self):
+        for r in self.replicas:
+            r.start_metering()
+
+    def stop_metering(self) -> Dict[str, Dict[str, float]]:
+        """Stop every sampler; cumulative joules per replica per pool."""
+        return {r.name: r.stop_metering() for r in self.replicas}
+
+    def measured_energy_j(self) -> Dict[str, Dict[str, float]]:
+        return {r.name: r.measured_energy_j() for r in self.replicas}
+
+    def total_energy_j(self) -> float:
+        """Fleet-wide measured joules (both pools, every replica, idle
+        floors included) — THE number the routing policies compete on."""
+        return sum(sum(pools.values())
+                   for pools in self.measured_energy_j().values())
+
+    # ----------------------------------------------------------------- stats
+    @property
+    def stats(self) -> PhaseStats:
+        """Fleet-wide phase totals (clock fields are replica 0's decode)."""
+        total = self.replicas[0].stats
+        for r in self.replicas[1:]:
+            total = total.merged_with(r.stats)
+        return total
+
+    def stats_by_replica(self) -> Dict[str, PhaseStats]:
+        return {r.name: r.stats for r in self.replicas}

@@ -92,6 +92,8 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     eos_token_id: Optional[int] = None     # None -> the pool's ModelConfig id
+    bucket: str = "mixed"                  # trace length-bucket tag (routing)
+    replica: Optional[str] = None          # fleet replica that served it
     # filled by the pool/scheduler
     output: List[int] = dataclasses.field(default_factory=list)
     prefill_s: float = 0.0
@@ -437,6 +439,14 @@ class Pool:
             self.sampler.sample_once()
         else:
             self.gauge.set(watts)
+
+    def set_idle_power(self, watts: float):
+        """Set the no-work power floor this pool idles at (0 for a
+        powered-down fleet replica, the chip's p_idle otherwise) and refresh
+        the gauge — bracketed with samples under synchronous metering so the
+        step change integrates exactly."""
+        self.idle_power_w = float(watts)
+        self._refresh_gauge()
 
     def sample_now(self):
         """Synchronous-metering hook: record a sample at the current clock

@@ -1,0 +1,169 @@
+"""Pluggable request routing over a fleet of serving replicas.
+
+A ``Router`` picks, per arriving request, which replica's waiting queue to
+join. Candidates are the *routable* replicas (powered up, not draining) in
+fleet order; every policy is a deterministic pure function of the visible
+replica state plus the request's (prompt_len, max_new_tokens, bucket), so
+seeded trace replays stay byte-identical.
+
+Policies:
+
+* ``jsq`` — join-shortest-queue: the load-balancing baseline. Minimises
+  queued + in-flight work; ties break on fleet order.
+* ``energy`` — energy-aware placement: route to the replica whose current
+  operating point predicts the lowest marginal joules/token for this
+  request's length profile (probed through the replica's own
+  ``ClockController``, so DVFS mode and live occupancy are priced in).
+  Because energy/token *falls* with batch occupancy (weight streaming
+  amortises), this policy consolidates load onto few replicas instead of
+  spreading it — the opposite instinct to JSQ, and the lever behind the
+  "power a replica down vs underclock all of them" question. A headroom
+  gate keeps it from queueing unboundedly: replicas already holding a full
+  batch worth of work are skipped while any open one remains.
+* ``affinity`` — arch-affinity: length-bucketed dispatch across
+  heterogeneous replicas keyed off the trace's ``bucket`` tag. Long-context
+  requests go to the architecture whose energy curve is flattest there
+  (GDN/Mamba-class: O(1) state, no KV growth), short-chat to the arch
+  cheapest at short context (GQA-class); rankings come from each replica
+  controller's policy-table operating points, not hard-coded preferences.
+
+``make_router(name, **kwargs)`` builds from the ``ROUTERS`` registry — the
+string a ``FleetSpec.router`` field names.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, List, Protocol, Sequence
+
+if TYPE_CHECKING:                       # only for type hints; no import cycle
+    from repro.serving.fleet import Replica
+
+
+class Router(Protocol):
+    """Routing policy: pick the replica an arriving request joins."""
+
+    name: str
+
+    def route(self, candidates: Sequence["Replica"], *, prompt_len: int,
+              max_new_tokens: int, bucket: str = "mixed") -> "Replica":
+        """Return one of ``candidates`` (never empty; fleet order)."""
+        ...
+
+
+def _jsq_pick(candidates: Sequence["Replica"]) -> "Replica":
+    # min() is stable: the first minimal candidate (fleet order) wins ties
+    return min(candidates, key=lambda r: r.queue_depth())
+
+
+class JoinShortestQueue:
+    """Load-balancing baseline: least queued + in-flight work wins."""
+
+    name = "jsq"
+
+    def route(self, candidates, *, prompt_len, max_new_tokens,
+              bucket="mixed"):
+        return _jsq_pick(candidates)
+
+
+class EnergyAware:
+    """Lowest predicted marginal joules/token, with a queue-headroom gate.
+
+    ``headroom`` scales the gate: a replica is *open* while its queue depth
+    (waiting + in flight) is below ``headroom x decode slots``; once every
+    candidate is saturated the policy degrades to JSQ, so overload never
+    queues unboundedly behind the energetically-cheapest replica.
+    """
+
+    name = "energy"
+
+    def __init__(self, headroom: float = 1.0):
+        if headroom <= 0:
+            raise ValueError("headroom must be > 0")
+        self.headroom = headroom
+
+    def _marginal_mj(self, replica: "Replica", prompt_len: int,
+                     max_new_tokens: int) -> float:
+        """Joules this replica's controller predicts for the whole request —
+        prefill of the prompt plus the decode budget — at the occupancy and
+        context it would hold after admitting it. Both phases count: cheap
+        flat decode must not win long-prompt traffic past a brutal prefill."""
+        ctl = replica.controller
+        pool = replica.decode_pool
+        occ = min(pool.occupancy() + len(replica.waiting) + 1, pool.max_batch)
+        # mean live context over the request's decode: prompt + half budget
+        ctx = float(prompt_len + max_new_tokens / 2.0)
+        dec = ctl.operating_point("decode", occ, ctx)
+        pre = ctl.operating_point("prefill", 1, ctx)
+        return (prompt_len * pre.profile.energy_per_token_mj
+                + max_new_tokens * dec.profile.energy_per_token_mj)
+
+    def route(self, candidates, *, prompt_len, max_new_tokens,
+              bucket="mixed"):
+        if any(r.controller is None for r in candidates):
+            return _jsq_pick(candidates)        # nothing to price with
+        open_ = [r for r in candidates
+                 if r.queue_depth() < self.headroom * r.decode_pool.max_batch]
+        if not open_:
+            return _jsq_pick(candidates)
+        return min(open_, key=lambda r: (
+            self._marginal_mj(r, prompt_len, max_new_tokens),
+            r.queue_depth(),
+        ))
+
+
+class ArchAffinity:
+    """Length-bucketed dispatch across heterogeneous architectures.
+
+    Replicas are ranked by their controller's modelled whole-request joules
+    (``ClockController.request_energy_mj``) at the bucket's policy column —
+    short-tagged requests priced at the batched short-context regime, long
+    ones at the batched long-context regime, prefill included. The trace
+    tag picks the column, the energy model picks the arch: long-context
+    goes to the flattest energy curve (GDN/Mamba-class O(1) state), not to
+    a hard-coded preference. Unlike ``energy`` this ranking ignores live
+    occupancy — it is a stable arch-dispatch table, softened only by the
+    queue-headroom gate (best-ranked replica with room wins; overflow walks
+    down the ranking; saturation degrades to JSQ). Untagged (``mixed``)
+    requests or controller-less replicas also fall back to JSQ.
+    """
+
+    name = "affinity"
+
+    def __init__(self, headroom: float = 1.0):
+        if headroom <= 0:
+            raise ValueError("headroom must be > 0")
+        self.headroom = headroom
+
+    def ranking(self, candidates: Sequence["Replica"], *, prompt_len: int,
+                max_new_tokens: int, bucket: str) -> List["Replica"]:
+        """Candidates, cheapest modelled whole-request joules first."""
+        return sorted(
+            candidates,
+            key=lambda r: r.controller.request_energy_mj(
+                prompt_len, max_new_tokens, bucket),
+        )
+
+    def route(self, candidates, *, prompt_len, max_new_tokens,
+              bucket="mixed"):
+        if bucket not in ("short", "long") or \
+                any(r.controller is None for r in candidates):
+            return _jsq_pick(candidates)
+        for r in self.ranking(candidates, prompt_len=prompt_len,
+                              max_new_tokens=max_new_tokens, bucket=bucket):
+            if r.queue_depth() < self.headroom * r.decode_pool.max_batch:
+                return r
+        return _jsq_pick(candidates)
+
+
+ROUTERS = {
+    JoinShortestQueue.name: JoinShortestQueue,
+    EnergyAware.name: EnergyAware,
+    ArchAffinity.name: ArchAffinity,
+}
+
+
+def make_router(name: str, **kwargs) -> Router:
+    try:
+        cls = ROUTERS[name]
+    except KeyError:
+        raise ValueError(f"unknown router {name!r}; have {sorted(ROUTERS)}") from None
+    return cls(**kwargs)

@@ -112,3 +112,42 @@ class TestLengthProfiles:
         cfg = dataclasses.replace(CFG, eos_token_id=eos)
         for t in generate_trace(cfg, 30, seed=10):
             assert (t.prompt != eos).all()
+
+
+class TestLengthBuckets:
+    """The length-bucket tag routers key arch-affinity off: stamped from
+    the profile the generator actually drew, not re-derived thresholds."""
+
+    def test_pure_profiles_stamp_their_bucket(self):
+        short = generate_trace(CFG, 20, lengths="short_chat", seed=11,
+                               max_total_len=128)
+        longc = generate_trace(CFG, 20, lengths="long_context", seed=11,
+                               max_total_len=128)
+        assert all(t.bucket == "short" for t in short)
+        assert all(t.bucket == "long" for t in longc)
+
+    def test_mixed_tags_match_the_drawn_profile(self):
+        cap = 128
+        mixed = generate_trace(CFG, 60, lengths="mixed", seed=12,
+                               max_total_len=cap, mix_long=0.4)
+        assert {t.bucket for t in mixed} == {"short", "long"}
+        for t in mixed:
+            # generator contract: long prompts start at cap/2, short end at 32
+            assert (t.bucket == "long") == (t.prompt_len >= cap // 2)
+
+    def test_bucket_stamp_left_the_draw_sequence_alone(self):
+        """Adding the tag must not consume RNG draws: arrivals, lengths and
+        prompts are a pure function of the seed, tag or no tag."""
+        a = generate_trace(CFG, 25, lengths="mixed", seed=13, max_total_len=96)
+        b = generate_trace(CFG, 25, lengths="mixed", seed=13, max_total_len=96)
+        for x, y in zip(a, b):
+            assert x.arrival_s == y.arrival_s
+            assert x.max_new_tokens == y.max_new_tokens
+            assert x.bucket == y.bucket
+            np.testing.assert_array_equal(x.prompt, y.prompt)
+
+    def test_hand_built_requests_default_to_mixed(self):
+        from repro.core.traces import TracedRequest
+        t = TracedRequest(arrival_s=0.0, prompt=np.arange(4, dtype=np.int32),
+                          max_new_tokens=2)
+        assert t.bucket == "mixed"
