@@ -19,6 +19,7 @@ def main() -> None:
         kernels_micro,
         policy_bench,
         roofline_report,
+        serve_autoscale,
         serve_cluster,
         serve_fleet,
         serve_trace,
@@ -37,6 +38,7 @@ def main() -> None:
         serve_cluster,
         serve_trace,
         serve_fleet,
+        serve_autoscale,
         tpu_native,
         kernels_micro,
         roofline_report,

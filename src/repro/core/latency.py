@@ -125,9 +125,25 @@ class LatencySummary:
     mean_queue_s: float = 0.0
     p95_e2e_s: float = 0.0
 
+    @classmethod
+    def empty(cls) -> "LatencySummary":
+        """The well-defined zero-observation summary: every percentile and
+        mean is 0.0 and ``n_requests``/``n_tokens`` are 0. This is what
+        ``summarize_latency`` returns when nothing finished — e.g. when an
+        autoscaler parks the only replica mid-trace — so callers can always
+        read fields without guarding against a crash; check ``n_requests``
+        before treating the zeros (or a vacuous ``meets``) as a met SLO."""
+        return cls(n_requests=0, n_tokens=0,
+                   p50_ttft_s=0.0, p95_ttft_s=0.0, p99_ttft_s=0.0,
+                   p50_tbt_s=0.0, p95_tbt_s=0.0, p99_tbt_s=0.0,
+                   p50_e2e_s=0.0, p99_e2e_s=0.0,
+                   mean_ttft_s=0.0, mean_tbt_s=0.0)
+
     def meets(self, *, ttft_s: Optional[float] = None,
               tbt_s: Optional[float] = None) -> bool:
-        """Does this population meet a p99 SLO target pair?"""
+        """Does this population meet a p99 SLO target pair? Vacuously True
+        on an empty summary (no observations violate nothing) — gate on
+        ``n_requests`` where an empty population must not count as met."""
         ok = True
         if ttft_s is not None:
             ok = ok and self.p99_ttft_s <= ttft_s
@@ -137,7 +153,12 @@ class LatencySummary:
 
 
 def summarize_latency(requests: Iterable) -> LatencySummary:
-    """Fold ``Request``s (anything with a ``.ledger``) into a summary."""
+    """Fold ``Request``s (anything with a ``.ledger``) into a summary.
+
+    Requests whose ledgers carry no finished observations contribute
+    nothing but still count in ``n_requests``; an empty (or entirely
+    unfinished) population folds to ``LatencySummary.empty()``-shaped
+    zeros rather than crashing on empty percentile input."""
     ttfts: List[float] = []
     tbts: List[float] = []
     e2es: List[float] = []
@@ -155,6 +176,8 @@ def summarize_latency(requests: Iterable) -> LatencySummary:
         if led.queue_s is not None:
             queues.append(led.queue_s)
         n_tokens += len(getattr(r, "output", ()))
+    if n == 0:
+        return LatencySummary.empty()
     return LatencySummary(
         n_requests=n,
         n_tokens=n_tokens,

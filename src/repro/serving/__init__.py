@@ -6,6 +6,14 @@ timeline (trace replay with an SLO-regulated DVFS loop)."""
 from repro.core.clock import VirtualClock
 from repro.core.latency import LatencyLedger, LatencySummary, summarize_latency
 from repro.core.traces import BUCKETS, TracedRequest, generate_trace
+from repro.serving.autoscaler import (
+    AUTOSCALERS,
+    Autoscaler,
+    QueueAutoscaler,
+    ScaleEvent,
+    ScheduleAutoscaler,
+    make_autoscaler,
+)
 from repro.serving.cluster import Cluster
 from repro.serving.controller import ClockController, Transition
 from repro.serving.engine import EOS, PhaseStats, Request, ServingEngine
@@ -22,6 +30,7 @@ from repro.serving.router import (
 )
 from repro.serving.spec import (
     CLOCK_MODES,
+    AutoscalerSpec,
     ClockSpec,
     FleetSpec,
     PoolSpec,
@@ -56,6 +65,7 @@ __all__ = [
     "ClockSpec",
     "ReplicaSpec",
     "FleetSpec",
+    "AutoscalerSpec",
     # routing
     "Router",
     "ROUTERS",
@@ -63,4 +73,11 @@ __all__ = [
     "EnergyAware",
     "ArchAffinity",
     "make_router",
+    # autoscaling
+    "Autoscaler",
+    "AUTOSCALERS",
+    "QueueAutoscaler",
+    "ScheduleAutoscaler",
+    "ScaleEvent",
+    "make_autoscaler",
 ]

@@ -43,12 +43,18 @@ from repro.models.config import ModelConfig
 
 @dataclasses.dataclass(frozen=True)
 class Transition:
-    """One lever change on one pool (the controller's audit trail)."""
+    """One lever change on one pool (the controller's audit trail).
+
+    Fleet scale events land in the same trail (``note_scale_event``): a
+    ``power_up``/``drain``/``power_down``/``warm``/``park`` lever with
+    ``pool="replica"`` — so the joules a warm-up burns are auditable next
+    to the DVFS moves that priced every other interval."""
     step: int
     pool: str
     regime: str
-    lever: str                    # "lock" | "cap" | "default"
-    configured: float             # MHz for locks, W for caps
+    lever: str                    # "lock" | "cap" | "default" | a scale action
+    configured: float             # MHz for locks, W for caps, warm-up s for
+                                  # power_up scale events
     actual_clock_mhz: float
     engaged: bool
 
@@ -235,6 +241,18 @@ class ClockController:
             self._slo_idx[regime] = idx - 1
             ttft_obs.clear()
             tbt_obs.clear()
+
+    def note_scale_event(self, step: int, action: str, *,
+                         configured: float = 0.0):
+        """Record a fleet scale decision on this replica as a
+        ``Transition`` (lever = the scale action, ``configured`` = the
+        modelled warm-up seconds for a ``power_up``). Keeps the energy
+        audit trail complete: warm-up joules are attributed to an explicit
+        lever move, not silently folded into idle time."""
+        self.transitions.append(Transition(
+            step=step, pool="replica", regime="fleet", lever=action,
+            configured=float(configured), actual_clock_mhz=0.0, engaged=True,
+        ))
 
     def decode_lock_mhz(self, occupancy: int, mean_context: Optional[float] = None) -> float:
         """The lock (MHz) a decode pool at this occupancy would receive.

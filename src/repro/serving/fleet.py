@@ -15,7 +15,11 @@ runtime pieces of the spec-first fleet API (``repro.serving.spec``):
   in-flight work finishes, ``power_down()`` zeroes the idle floor so a
   parked replica accrues NO joules (not even idle watts), ``power_up()``
   rejoins the routable set.
-* ``Fleet`` — the replica set plus a ``Router`` (``repro.serving.router``).
+* ``Fleet`` — the replica set plus a ``Router`` (``repro.serving.router``)
+  and, optionally, an ``Autoscaler`` (``repro.serving.autoscaler``) that
+  the fleet ticks every barrier round: it drains replicas into diurnal
+  valleys and powers them up ahead of peaks, with a modelled ``warmup_s``
+  during which a powering-up replica draws idle watts but admits nothing.
   ``Fleet.run_trace`` subsumes ``Cluster.run_trace``: arrivals release as
   the serving clock crosses their stamps, the router picks each request's
   replica, and every busy replica takes one tick per round.
@@ -35,13 +39,15 @@ facade) degenerates to exactly the pre-fleet behaviour.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional
+from collections import deque
+from typing import Any, Callable, Deque, Dict, Iterable, List, Mapping, Optional, Tuple
 
 import numpy as np
 
 from repro.core.clock import VirtualClock
 from repro.core.traces import TracedRequest
 from repro.models.config import ModelConfig
+from repro.serving.autoscaler import Autoscaler, ScaleEvent, make_autoscaler
 from repro.serving.controller import ClockController
 from repro.serving.pool import (
     PhaseStats,
@@ -157,6 +163,13 @@ class Replica:
         self.waiting: List[Request] = []
         self.draining = False
         self.powered = True
+        # warm-up window end (fleet clock): set by power_up(warmup_s=...);
+        # while the clock is inside it the replica draws idle-floor watts
+        # but admits nothing — the autoscaler's modelled power-up cost
+        self._warming_until_s: Optional[float] = None
+        # (admit time, queue delay) of recent admissions — the rolling
+        # queue-delay signal the queue autoscaler evaluates
+        self.admit_log: Deque[Tuple[float, float]] = deque(maxlen=4096)
         self._uid = 0
         self._step_no = 0
         if controller is not None:
@@ -240,9 +253,16 @@ class Replica:
     def step(self) -> List[Request]:
         """One replica tick: retune clocks, admit/migrate, decode."""
         self._step_no += 1
+        if self.warming():
+            # inside the warm-up window: idle-floor watts accrue (the
+            # barrier samples this replica's pools) but nothing admits —
+            # queued work waits until the fleet marks the replica warm
+            return []
         if self.controller is not None:
             self.controller.tick(self.pools(), self._step_no)
         admitted = self.scheduler.tick(self.waiting, self.prefill_pool, self.decode_pool)
+        for req in admitted:
+            self.admit_log.append((req.ledger.admitted_s, req.ledger.queue_s))
         if self.controller is not None and admitted:
             # admission changed decode occupancy: re-resolve so this step's
             # tokens are priced at the true post-admission operating point
@@ -278,8 +298,16 @@ class Replica:
 
     # ------------------------------------------------- drain / power gating
     def routable(self) -> bool:
-        """May the router place NEW work here?"""
+        """May the router place NEW work here? Warming replicas stay
+        routable — queued work simply waits out the warm-up — but every
+        router prefers warm replicas while any exists."""
         return self.powered and not self.draining
+
+    def warming(self) -> bool:
+        """Inside the modelled warm-up window: powered (idle-floor watts
+        accrue) but admitting nothing until the window elapses."""
+        return (self.powered and self._warming_until_s is not None
+                and self.clock() < self._warming_until_s - 1e-12)
 
     def drain(self):
         """Stop accepting new placements; in-flight work keeps serving.
@@ -298,14 +326,19 @@ class Replica:
             raise RuntimeError(
                 f"power_down on busy replica {self.name!r} — drain it first")
         self.powered = False
+        self._warming_until_s = None
         for pool in self.pools().values():
             pool.set_idle_power(0.0)
 
-    def power_up(self):
+    def power_up(self, warmup_s: float = 0.0):
         """Rejoin the routable set; the idle floor is restored immediately
-        (power-up is never free, even before work arrives)."""
+        (power-up is never free, even before work arrives). A non-zero
+        ``warmup_s`` models the power-up cost: the replica draws idle-floor
+        watts for that long while admitting nothing (``warming()``)."""
         self.powered = True
         self.draining = False
+        self._warming_until_s = (
+            self.clock() + warmup_s if warmup_s > 0 else None)
         if self.controller is not None:
             for pool in self.pools().values():
                 pool.set_idle_power(self.controller.emodel.spec.p_idle)
@@ -355,6 +388,7 @@ class Fleet:
         replicas: Iterable[Replica],
         *,
         router: Optional[Router] = None,
+        autoscaler: Optional[Autoscaler] = None,
     ):
         self.replicas: List[Replica] = list(replicas)
         if not self.replicas:
@@ -377,6 +411,19 @@ class Fleet:
         self.clock = self.replicas[0].clock
         self.router: Router = router if router is not None else JoinShortestQueue()
         self.by_name: Dict[str, Replica] = {r.name: r for r in self.replicas}
+        # ---- autoscaling: scale ledger + the policy, ticked per round ----
+        self.autoscaler = autoscaler
+        self.scale_events: List[ScaleEvent] = []
+        self.arrivals_total = 0          # the schedule policy's rate signal
+        self._round = 0
+        if autoscaler is not None:
+            # the fleet starts at the policy floor: replicas beyond
+            # min_replicas park immediately (zero joules until powered up)
+            for r in self.replicas[max(1, autoscaler.min_replicas):]:
+                if not r.busy():
+                    r.drain()            # idle at build time -> parks now
+                    self._record_scale(self.now_s(), "park", r,
+                                       "fleet starts at min_replicas")
 
     # -------------------------------------------------------------- builder
     @classmethod
@@ -412,7 +459,12 @@ class Fleet:
             )
             for rs, c in zip(spec.replicas, clocks)
         ]
-        return cls(replicas, router=make_router(spec.router, **spec.router_args))
+        return cls(
+            replicas,
+            router=make_router(spec.router, **spec.router_args),
+            autoscaler=(make_autoscaler(spec.autoscaler)
+                        if spec.autoscaler is not None else None),
+        )
 
     # ------------------------------------------------------------------ api
     def route(self, *, prompt_len: int, max_new_tokens: int,
@@ -440,6 +492,7 @@ class Fleet:
         """Route + queue one request; returns the stamped ``Request``
         (its ``replica`` field records the placement)."""
         prompt = np.asarray(prompt, np.int32)
+        self.arrivals_total += 1
         replica = self.route(prompt_len=len(prompt),
                              max_new_tokens=max_new_tokens, bucket=bucket)
         return replica.submit(prompt, max_new_tokens, temperature=temperature,
@@ -474,14 +527,29 @@ class Fleet:
         """One fleet round — the single definition of round semantics, also
         the body of ``run_trace``/``run_to_completion``: every busy replica
         takes one concurrent tick (each on its own clock), the barrier
-        re-syncs the timeline, then drained replicas that ran dry power
-        off."""
+        re-syncs the timeline, drained replicas that ran dry power off,
+        then the autoscaler (if any) takes its scale decision."""
         finished: List[Request] = []
+        t_before = self.now_s() if self.virtual else 0.0
         for r in self.replicas:
             if r.busy():
                 finished.extend(r.step())
         self._sync_round()
+        if self.virtual and self.now_s() == t_before:
+            # every busy replica sat inside its warm-up window, so nothing
+            # modelled a duration this round: jump to the earliest warm-up
+            # completion (sampling idle watts across it) or the fleet would
+            # spin at a frozen clock
+            ends = [r._warming_until_s for r in self.replicas
+                    if r.busy() and r.warming()]
+            if ends:
+                t1 = min(ends)
+                for r in self.replicas:
+                    if r.clock.now_s < t1:
+                        r.clock.advance_to(t1)
+                        r.sample_pools()
         self._power_down_drained()
+        self._autoscale()
         return finished
 
     def drain(self, name: str):
@@ -494,6 +562,121 @@ class Fleet:
         for r in self.replicas:
             if r.draining and r.powered and not r.busy():
                 r.power_down()
+                if self.autoscaler is not None:
+                    self._record_scale(self.now_s(), "power_down", r,
+                                       "drained dry")
+
+    # --------------------------------------------------------- autoscaling
+    def n_active(self) -> int:
+        """Replicas carrying or accepting load: powered, not draining
+        (warming ones count — their capacity is already committed)."""
+        return sum(r.powered and not r.draining for r in self.replicas)
+
+    def n_warming(self) -> int:
+        return sum(r.warming() for r in self.replicas)
+
+    def n_parked(self) -> int:
+        return sum(not r.powered for r in self.replicas)
+
+    def has_scale_up_target(self) -> bool:
+        """Is there a replica a scale-up could add? Either a parked one
+        (full power-up + warm-up) or a powered one still draining (a
+        reclaim: cancel the drain, rejoin warm, zero warm-up cost)."""
+        return any(not r.powered or r.draining for r in self.replicas)
+
+    def queue_delay_samples(self, now_s: float, window_s: float,
+                            since_s: float = float("-inf")) -> List[float]:
+        """The rolling queue-delay population the queue policy evaluates:
+        delays of requests admitted inside the window (and after
+        ``since_s``), plus the live age of every still-waiting request —
+        so a backlog is visible *before* anything gets admitted."""
+        cut = max(now_s - window_s, since_s)
+        xs: List[float] = []
+        for r in self.replicas:
+            xs.extend(q for t, q in r.admit_log
+                      if t >= cut and q is not None)
+            xs.extend(now_s - req.ledger.arrival_s for req in r.waiting
+                      if req.ledger.arrival_s is not None)
+        return xs
+
+    def _record_scale(self, now_s: float, action: str, replica: Replica,
+                      reason: str):
+        policy = self.autoscaler.name if self.autoscaler is not None else "manual"
+        self.scale_events.append(ScaleEvent(
+            t_s=now_s, action=action, replica=replica.name,
+            policy=policy, reason=reason))
+        if replica.controller is not None:
+            warmup = (self.autoscaler.warmup_s
+                      if self.autoscaler is not None and action == "power_up"
+                      else 0.0)
+            replica.controller.note_scale_event(
+                self._round, action, configured=warmup)
+
+    def _pick_power_up(self) -> Optional[Replica]:
+        """The cheapest capacity to add, deterministically: a powered
+        replica still draining rejoins warm for free (reclaim — it never
+        powered down, so a burst arriving mid-drain must not pay
+        drain-dry + a full warm-up), else the first parked replica in
+        fleet order."""
+        if (self.autoscaler is not None
+                and self.n_active() >= self.autoscaler.max_replicas(self)):
+            return None
+        for r in self.replicas:
+            if r.powered and r.draining:
+                return r
+        for r in self.replicas:
+            if not r.powered:
+                return r
+        return None
+
+    def _pick_drain(self) -> Optional[Replica]:
+        """The cheapest replica to give up: a still-warming one first
+        (nothing invested beyond its warm-up watts), then the lightest
+        queue, ties broken toward the highest fleet index so the head of
+        the fleet stays the sticky base."""
+        floor = max(1, self.autoscaler.min_replicas) if self.autoscaler else 1
+        cands = [(i, r) for i, r in enumerate(self.replicas)
+                 if r.powered and not r.draining]
+        if len(cands) <= floor:
+            return None
+        return min(cands, key=lambda ir: (
+            not ir[1].warming(), ir[1].queue_depth(), -ir[0]))[1]
+
+    def _autoscale(self):
+        """One autoscaler round: finish elapsed warm-ups, then apply the
+        policy's decision (at most one replica moves per round). Every
+        state change lands in ``scale_events`` and as a ``Transition`` on
+        the replica's controller — warm-up joules are attributed, not
+        free."""
+        if self.autoscaler is None:
+            return
+        self._round += 1
+        now = self.now_s()
+        for r in self.replicas:
+            if (r.powered and r._warming_until_s is not None
+                    and not r.warming()):
+                r._warming_until_s = None
+                self._record_scale(now, "warm", r, "warm-up window elapsed")
+        decision = self.autoscaler.tick(self, now)
+        if decision is None:
+            return
+        kind, reason = decision
+        if kind == "up":
+            r = self._pick_power_up()
+            if r is not None:
+                if r.powered:           # reclaim a drain-in-progress: warm,
+                    r.power_up()        # routable now, no warm-up window
+                    self._record_scale(now, "reclaim", r, reason)
+                else:
+                    r.power_up(warmup_s=self.autoscaler.warmup_s)
+                    self._record_scale(now, "power_up", r, reason)
+        elif kind == "down":
+            r = self._pick_drain()
+            if r is not None:
+                r.drain()
+                self._record_scale(now, "drain", r, reason)
+                if not r.powered:       # was idle: parked immediately
+                    self._record_scale(now, "power_down", r, "drained dry")
 
     # -------------------------------------------------------- trace replay
     def _advance_idle(self, dt_s: float):
@@ -547,8 +730,11 @@ class Fleet:
                 if not self.busy():
                     if i >= len(pending):
                         break
-                    # nothing in flight anywhere: idle until the next arrival
+                    # nothing in flight anywhere: idle until the next
+                    # arrival; the autoscaler still ticks so a diurnal
+                    # valley's sustained slack can drain replicas mid-gap
                     self._advance_idle(pending[i].arrival_s - now)
+                    self._autoscale()
                     continue
                 steps += sum(r.busy() for r in self.replicas)
                 done.extend(self.step())

@@ -49,6 +49,17 @@ class Router(Protocol):
         ...
 
 
+def prefer_warm(candidates: Sequence["Replica"]) -> List["Replica"]:
+    """Scale-awareness shared by every policy: a replica inside its
+    autoscaler warm-up window draws power but admits nothing, so route to
+    warm replicas while any exists; only when every candidate is warming
+    does work queue at one (it admits once the window elapses). Draining
+    replicas never reach a router — the fleet filters them out of the
+    candidate set before routing."""
+    warm = [r for r in candidates if not r.warming()]
+    return warm if warm else list(candidates)
+
+
 def _jsq_pick(candidates: Sequence["Replica"]) -> "Replica":
     # min() is stable: the first minimal candidate (fleet order) wins ties
     return min(candidates, key=lambda r: r.queue_depth())
@@ -61,7 +72,7 @@ class JoinShortestQueue:
 
     def route(self, candidates, *, prompt_len, max_new_tokens,
               bucket="mixed"):
-        return _jsq_pick(candidates)
+        return _jsq_pick(prefer_warm(candidates))
 
 
 class EnergyAware:
@@ -98,6 +109,7 @@ class EnergyAware:
 
     def route(self, candidates, *, prompt_len, max_new_tokens,
               bucket="mixed"):
+        candidates = prefer_warm(candidates)
         if any(r.controller is None for r in candidates):
             return _jsq_pick(candidates)        # nothing to price with
         open_ = [r for r in candidates
@@ -144,6 +156,7 @@ class ArchAffinity:
 
     def route(self, candidates, *, prompt_len, max_new_tokens,
               bucket="mixed"):
+        candidates = prefer_warm(candidates)
         if bucket not in ("short", "long") or \
                 any(r.controller is None for r in candidates):
             return _jsq_pick(candidates)

@@ -13,6 +13,8 @@ Hierarchy::
 
     FleetSpec
       ├── router: "jsq" | "energy" | "affinity"  (+ router_args)
+      ├── autoscaler: AutoscalerSpec | None      (queue- or forecast-driven
+      │                                           drain/power-up policy)
       └── replicas: (ReplicaSpec, ...)
             ├── arch, name, max_seq_len, prefill_chunk_tokens, rng_seed
             ├── clock:   ClockSpec  (mode + ClockController settings)
@@ -101,6 +103,71 @@ class ClockSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class AutoscalerSpec:
+    """Queue-aware / forecast-driven drain & power-up policy, as data.
+
+    ``policy`` names an entry in ``repro.serving.autoscaler.AUTOSCALERS``:
+
+    * ``queue``    — reactive: power a replica up when the rolling
+      queue-delay p95 breaches ``queue_p95_target_s``; drain one after the
+      signal has held ``slack`` headroom for a full ``hold_s`` window.
+    * ``schedule`` — anticipatory: a Holt (EWMA level + trend) arrival-rate
+      forecast at horizon ``warmup_s + lead_s`` powers replicas up *ahead*
+      of diurnal peaks so they are warm when the ramp lands.
+
+    ``warmup_s`` is the modelled warm-up cost both policies amortise: a
+    powering-up replica draws idle-floor watts for that long while
+    admitting nothing (the joules land in the fleet ledger, attributed via
+    a ``power_up`` Transition — warm-up is never free).
+    """
+
+    policy: str = "queue"
+    min_replicas: int = 1
+    max_replicas: int = 0               # 0 -> the whole fleet
+    warmup_s: float = 0.0
+    tick_interval_s: float = 0.0        # min seconds between evaluations
+    hold_s: float = 1.0                 # sustained-slack window before any
+                                        # scale-down (the anti-flap gate)
+    # ---- queue policy ----------------------------------------------------
+    queue_p95_target_s: float = 1.0
+    slack: float = 0.5                  # scale down only below slack*target
+    window_s: float = 30.0              # rolling queue-delay window
+    # ---- schedule policy -------------------------------------------------
+    sample_interval_s: float = 1.0      # arrival-rate sampling cadence
+    ewma_alpha: float = 0.3             # Holt level smoothing
+    trend_beta: float = 0.2             # Holt trend smoothing
+    replica_rps: float = 1.0            # modelled per-replica capacity
+    target_utilisation: float = 0.75    # fill replicas to this fraction
+    lead_s: float = 0.0                 # anticipation beyond the warm-up
+
+    def __post_init__(self):
+        from repro.serving.autoscaler import AUTOSCALERS
+        _require(self.policy in AUTOSCALERS,
+                 f"unknown autoscaler policy {self.policy!r}; "
+                 f"have {sorted(AUTOSCALERS)}")
+        _require(self.min_replicas >= 1,
+                 f"AutoscalerSpec.min_replicas must be >= 1, got {self.min_replicas}")
+        _require(self.max_replicas == 0 or self.max_replicas >= self.min_replicas,
+                 "AutoscalerSpec.max_replicas must be 0 (whole fleet) or >= min_replicas")
+        _require(self.warmup_s >= 0 and self.tick_interval_s >= 0
+                 and self.hold_s >= 0 and self.lead_s >= 0,
+                 "AutoscalerSpec durations must be >= 0")
+        _require(self.queue_p95_target_s > 0 and self.window_s > 0
+                 and self.sample_interval_s > 0,
+                 "AutoscalerSpec signal windows/targets must be > 0")
+        _require(0.0 < self.slack < 1.0, "AutoscalerSpec.slack must be in (0, 1)")
+        _require(0.0 < self.ewma_alpha <= 1.0 and 0.0 <= self.trend_beta <= 1.0,
+                 "AutoscalerSpec needs 0 < ewma_alpha <= 1 and 0 <= trend_beta <= 1")
+        _require(self.replica_rps > 0, "AutoscalerSpec.replica_rps must be > 0")
+        _require(0.0 < self.target_utilisation <= 1.0,
+                 "AutoscalerSpec.target_utilisation must be in (0, 1]")
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "AutoscalerSpec":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class ReplicaSpec:
     """One prefill/decode replica pair: arch + budgets + clock policy."""
 
@@ -145,6 +212,7 @@ class FleetSpec:
     replicas: Tuple[ReplicaSpec, ...]
     router: str = "jsq"
     router_args: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    autoscaler: Optional[AutoscalerSpec] = None
 
     def __post_init__(self):
         object.__setattr__(self, "replicas", tuple(self.replicas))
@@ -155,6 +223,13 @@ class FleetSpec:
         from repro.serving.router import ROUTERS
         _require(self.router in ROUTERS,
                  f"unknown router {self.router!r}; have {sorted(ROUTERS)}")
+        if self.autoscaler is not None:
+            _require(self.autoscaler.min_replicas <= len(self.replicas),
+                     f"autoscaler min_replicas {self.autoscaler.min_replicas} "
+                     f"exceeds the fleet size {len(self.replicas)}")
+            _require(self.autoscaler.max_replicas <= len(self.replicas),
+                     f"autoscaler max_replicas {self.autoscaler.max_replicas} "
+                     f"exceeds the fleet size {len(self.replicas)}")
 
     # ------------------------------------------------------------- json i/o
     def to_dict(self) -> Dict[str, Any]:
@@ -169,6 +244,8 @@ class FleetSpec:
         d = dict(d)
         d["replicas"] = tuple(
             ReplicaSpec.from_dict(r) for r in d.get("replicas", ()))
+        if d.get("autoscaler") is not None:
+            d["autoscaler"] = AutoscalerSpec.from_dict(d["autoscaler"])
         return cls(**d)
 
     @classmethod

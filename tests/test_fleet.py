@@ -204,6 +204,65 @@ class TestRouters:
         assert got == pytest.approx(expect)
 
 
+class TestRouterHeadroomEdges:
+    """The headroom gate's boundary behaviour: a replica EXACTLY at
+    ``headroom x decode slots`` is closed (strict <), saturation degrades
+    to JSQ, and routing survives every replica draining at once."""
+
+    def _loaded(self, replica, n):
+        for _ in range(n):
+            replica.submit(np.arange(1, 9, dtype=np.int32), 2)
+
+    def test_energy_gate_closes_exactly_at_threshold(self, setup):
+        spec = FleetSpec(replicas=(_rspec("g"), _rspec("m", ALT)),
+                         router="energy")
+        fleet = _fleet(spec, setup)     # batch=2, headroom=1.0 -> gate at 2
+        g, m = fleet.replicas
+        self._loaded(g, 2)              # queue_depth == 2: AT the gate
+        assert g.queue_depth() == 1.0 * g.decode_pool.max_batch
+        # g is closed even if it prices cheaper; the open replica wins
+        assert fleet.route(prompt_len=8, max_new_tokens=2) is m
+
+    def test_energy_degrades_to_jsq_when_every_gate_closed(self, setup):
+        spec = FleetSpec(replicas=(_rspec("g"), _rspec("m", ALT)),
+                         router="energy")
+        fleet = _fleet(spec, setup)
+        g, m = fleet.replicas
+        self._loaded(g, 3)              # past the gate
+        self._loaded(m, 2)              # at the gate
+        # both closed: JSQ fallback -> least loaded, not cheapest joules
+        assert fleet.route(prompt_len=8, max_new_tokens=2) is m
+
+    def test_affinity_walks_ranking_past_gated_best(self, setup):
+        spec = FleetSpec(replicas=(_rspec("g"), _rspec("m", ALT)),
+                         router="affinity")
+        fleet = _fleet(spec, setup)
+        best = fleet.router.ranking(fleet.replicas, prompt_len=8,
+                                    max_new_tokens=2, bucket="long")[0]
+        other = next(r for r in fleet.replicas if r is not best)
+        self._loaded(best, 2)           # best-ranked replica at the gate
+        assert fleet.route(prompt_len=8, max_new_tokens=2,
+                           bucket="long") is other
+
+    def test_route_survives_every_replica_draining(self, setup):
+        spec = FleetSpec(replicas=(_rspec("a"), _rspec("b")))
+        fleet = _fleet(spec, setup)
+        self._loaded(fleet.by_name["a"], 2)   # busy: drain keeps it powered
+        self._loaded(fleet.by_name["b"], 1)
+        fleet.drain("a")
+        fleet.drain("b")
+        assert not any(r.routable() for r in fleet.replicas)
+        # powered fallback still serves, and still load-balances
+        assert fleet.route(prompt_len=8, max_new_tokens=2).name == "b"
+
+    def test_route_raises_with_everything_parked(self, setup):
+        fleet = _fleet(FleetSpec(replicas=(_rspec("a"), _rspec("b"))), setup)
+        fleet.drain("a")                # idle -> parks immediately
+        fleet.drain("b")
+        with pytest.raises(RuntimeError, match="no powered replica"):
+            fleet.route(prompt_len=8, max_new_tokens=2)
+
+
 class TestDrainPowerGating:
     def test_drained_replica_accrues_zero_joules(self, setup):
         spec = FleetSpec(replicas=(_rspec("live"), _rspec("parked")))
