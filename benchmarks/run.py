@@ -21,6 +21,7 @@ def main() -> None:
         roofline_report,
         serve_autoscale,
         serve_cluster,
+        serve_events,
         serve_fleet,
         serve_trace,
         table1_power_cap,
@@ -39,6 +40,7 @@ def main() -> None:
         serve_trace,
         serve_fleet,
         serve_autoscale,
+        serve_events,
         tpu_native,
         kernels_micro,
         roofline_report,

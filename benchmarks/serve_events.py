@@ -1,0 +1,272 @@
+"""Event-engine fleet replay at scale: 10^5 requests over 16 replicas.
+
+The discrete-event serving core (``repro.serving.events``) replaces the
+round barrier with a per-fleet event heap: replica prefill/decode pools
+run independent virtual timelines that meet only at handoff and routing,
+and homogeneous decode events at the same instant collapse into ONE
+fused jitted dispatch. This benchmark is its scale + determinism gate:
+
+    replay        16-replica qwen-class fleet, 10^5 aligned requests
+                  (waves of 16 identical prompts at one-step cadence, so
+                  every replica's decode event lands on the same instant
+                  and the fused fast path carries the whole run)
+    determinism   the replay runs twice; a sha256 over every request's
+                  outputs + ledger stamps must match byte-for-byte
+    fused         the fused dispatch cache must be exercised, and fused
+                  calls must cover the large majority of decode steps
+    overlap       on a prefill-burst trace (long prompts landing mid-
+                  decode) the event engine's p99 TTFT must be strictly
+                  better than the barrier driver's on the SAME trace —
+                  the timing bug the barrier was hiding, quantified
+
+Asserted:
+
+    all requests complete, both replays byte-identical
+    fused calls > 0 and >= 80% of decode steps ran fused
+    event p99 TTFT < barrier p99 TTFT on the burst trace
+    slowest single replay fits the wall budget
+        (REPRO_EVENTS_TIME_BUDGET_S, default 1800 s; 0 waives)
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_events            # full
+  or: PYTHONPATH=src python -m benchmarks.serve_events --smoke    # CI tier
+  add --json to write BENCH_serve_events.json (the perf-record artefact)
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import h200_model, write_bench_json, write_csv
+from repro.configs import reduced_config
+from repro.core.latency import summarize_latency
+from repro.core.traces import TracedRequest
+from repro.models import init_params
+from repro.serving import (
+    ClockSpec,
+    EventDrivenFleet,
+    Fleet,
+    FleetSpec,
+    PoolSpec,
+    ReplicaSpec,
+)
+
+ARCH = "gemma-2b"
+N_REPLICAS = 16
+BATCH = 8
+MAX_SEQ_LEN = 64
+CHUNK_TOKENS = 64
+PROMPT_LEN = 16
+MAX_NEW = 4
+WAVE_DT_S = 0.0021                  # ~ one locked-clock decode step
+TRACE_SEED = 17
+JSON_PATH = "BENCH_serve_events.json"
+# wall-clock budget for ONE replay (the acceptance bar); 0 waives
+TIME_BUDGET_S = float(os.environ.get("REPRO_EVENTS_TIME_BUDGET_S", "1800"))
+
+_PARAMS_CACHE = {}
+
+
+def params_for():
+    if ARCH not in _PARAMS_CACHE:
+        _PARAMS_CACHE[ARCH] = init_params(
+            reduced_config(ARCH), jax.random.PRNGKey(0))
+    return _PARAMS_CACHE
+
+
+def make_fleet(n=N_REPLICAS, *, batch=BATCH, max_seq_len=MAX_SEQ_LEN,
+               chunk=CHUNK_TOKENS) -> Fleet:
+    spec = FleetSpec(
+        replicas=tuple(
+            ReplicaSpec(name=f"r{i:02d}", arch=ARCH,
+                        clock=ClockSpec(mode="lock"),
+                        decode=PoolSpec(batch=batch),
+                        max_seq_len=max_seq_len,
+                        prefill_chunk_tokens=chunk)
+            for i in range(n)),
+        router="jsq",
+    )
+    return Fleet.from_spec(spec, emodel=h200_model(), params_for=params_for())
+
+
+def wave_trace(n_requests: int):
+    """Waves of ``N_REPLICAS`` identical prompts at one-step cadence: JSQ
+    spreads one per replica, the replicas stay in lockstep, and every
+    decode instant is shared fleet-wide — the fused fast path's shape."""
+    rng = np.random.default_rng(TRACE_SEED)
+    prompt = rng.integers(1, 100, PROMPT_LEN).astype(np.int32)
+    n_waves = n_requests // N_REPLICAS
+    return [
+        TracedRequest(arrival_s=w * WAVE_DT_S, prompt=prompt,
+                      max_new_tokens=MAX_NEW, bucket="mixed")
+        for w in range(n_waves) for _ in range(N_REPLICAS)
+    ]
+
+
+def burst_trace():
+    """One long-decode request, then long prompts landing mid-decode —
+    the shape where the barrier's admission-serialises-decode timing bug
+    costs TTFT (mirrors tests/test_events.py::TestOverlap)."""
+    def req(plen, arr, max_new, seed):
+        rng = np.random.default_rng(seed + plen)
+        return TracedRequest(
+            arrival_s=arr,
+            prompt=rng.integers(1, 100, plen).astype(np.int32),
+            max_new_tokens=max_new, bucket="mixed")
+
+    return [req(8, 0.0, 24, seed=1)] + [
+        req(480, 1e-4 * (i + 1), 4, seed=2 + i) for i in range(4)]
+
+
+def replay(trace):
+    """One event-engine replay; returns (metrics, replay sha256, wall s)."""
+    fleet = make_fleet()
+    eng = EventDrivenFleet(fleet)
+    t0 = time.perf_counter()
+    done = eng.run(trace, max_steps=10_000_000)
+    wall_s = time.perf_counter() - t0
+    done = sorted(done, key=lambda r: (r.ledger.arrival_s, r.replica, r.uid))
+    lat = summarize_latency(done)
+    blob = json.dumps({
+        "outputs": [r.output for r in done],
+        "stamps": [[r.ledger.arrival_s, r.ledger.admitted_s,
+                    r.ledger.first_token_s, r.ledger.finish_s]
+                   for r in done],
+        "measured_j": fleet.measured_energy_j(),
+    }, sort_keys=True)
+    metrics = {
+        "completed": len(done),
+        "requests": len(trace),
+        "replicas": len(fleet.replicas),
+        "decode_steps": eng._steps,
+        "fused_calls": eng.fused_calls,
+        "fused_step_pct": (100.0 * eng.fused_calls * len(fleet.replicas)
+                           / max(eng._steps, 1)),
+        "decode_tokens": fleet.stats.decode_tokens,
+        "total_j": fleet.total_energy_j(),
+        "p50_ttft_s": lat.p50_ttft_s,
+        "p99_ttft_s": lat.p99_ttft_s,
+        "p99_tbt_s": lat.p99_tbt_s,
+    }
+    return metrics, hashlib.sha256(blob.encode()).hexdigest(), wall_s
+
+
+def run(smoke: bool = False, write_json: bool = False):
+    """Harness contract: yields (name, us_per_call, derived) rows; raises
+    on any violated completion/determinism/fusion/overlap assertion."""
+    n_requests = 2_000 if smoke else 100_000
+    trace = wave_trace(n_requests)
+    n_requests = len(trace)             # whole waves only
+
+    out_rows = []
+    violations = []
+
+    first, sha_a, wall_a = replay(trace)
+    again, sha_b, wall_b = replay(trace)
+    out_rows.append((
+        "serve_events/replay",
+        1e6 * wall_a / n_requests,
+        f"requests={n_requests};replicas={first['replicas']};"
+        f"steps={first['decode_steps']};total_j={first['total_j']:.3f};"
+        f"p99_ttft_ms={1e3 * first['p99_ttft_s']:.3f};"
+        f"wall_s={wall_a:.1f}",
+    ))
+    if first["completed"] != n_requests:
+        violations.append(
+            f"replay: {first['completed']}/{n_requests} completed")
+
+    # ---- byte-identical across replays -----------------------------------
+    identical = sha_a == sha_b and first == again
+    if not identical:
+        violations.append("replay NOT byte-identical across runs")
+    out_rows.append((
+        "serve_events/determinism", 0.0,
+        f"byte_identical={identical};sha={sha_a[:16]}",
+    ))
+
+    # ---- the fused fast path carried the run -----------------------------
+    if first["fused_calls"] == 0:
+        violations.append("fused fast path never fired")
+    if first["fused_step_pct"] < 80.0:
+        violations.append(
+            f"only {first['fused_step_pct']:.1f}% of decode steps ran "
+            f"fused (want >= 80%)")
+    out_rows.append((
+        "serve_events/fused", 0.0,
+        f"fused_calls={first['fused_calls']};"
+        f"fused_step_pct={first['fused_step_pct']:.1f}",
+    ))
+
+    # ---- overlap: event p99 TTFT strictly beats the barrier --------------
+    burst = burst_trace()
+    p99 = {}
+    for engine in ("events", "barrier"):
+        fleet = make_fleet(1, batch=4, max_seq_len=512, chunk=512)
+        done = fleet.run_trace(burst, engine=engine)
+        if len(done) != len(burst):
+            violations.append(
+                f"overlap/{engine}: {len(done)}/{len(burst)} completed")
+        p99[engine] = summarize_latency(done).p99_ttft_s
+    if not p99["events"] < p99["barrier"]:
+        violations.append(
+            f"overlap: event p99 TTFT {p99['events']:.6f}s not strictly "
+            f"better than barrier's {p99['barrier']:.6f}s")
+    out_rows.append((
+        "serve_events/overlap_vs_barrier", 0.0,
+        f"events_p99_ttft_ms={1e3 * p99['events']:.3f};"
+        f"barrier_p99_ttft_ms={1e3 * p99['barrier']:.3f};"
+        f"saved_pct={100 * (1 - p99['events'] / p99['barrier']):.1f}",
+    ))
+
+    # ---- wall budget ------------------------------------------------------
+    slowest = max(wall_a, wall_b)
+    if TIME_BUDGET_S > 0:
+        if slowest > TIME_BUDGET_S:
+            violations.append(
+                f"a replay took {slowest:.1f}s (> {TIME_BUDGET_S:.0f}s budget)")
+        out_rows.append((
+            "serve_events/wall_time", 0.0,
+            f"slowest_replay_s={slowest:.1f};budget_s={TIME_BUDGET_S:.0f}",
+        ))
+
+    results = {"replay": first, "replay_sha": sha_a,
+               "overlap_p99_ttft_s": p99, "wall_s": [wall_a, wall_b]}
+    write_csv("serve_events", ["metric", "value"],
+              [[k, v] for k, v in first.items()]
+              + [["events_p99_ttft_s", p99["events"]],
+                 ["barrier_p99_ttft_s", p99["barrier"]]])
+    if write_json:
+        write_bench_json(
+            "serve_events", results, smoke=smoke, path=JSON_PATH,
+            trace={"n": n_requests, "shape": "aligned-waves",
+                   "wave_dt_s": WAVE_DT_S, "prompt_len": PROMPT_LEN,
+                   "max_new": MAX_NEW, "seed": TRACE_SEED},
+        )
+        out_rows.append(("serve_events/json", 0.0, f"wrote={JSON_PATH}"))
+    if violations:
+        raise RuntimeError("; ".join(violations))
+    return out_rows
+
+
+def main():
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    write_json = "--json" in argv
+    ok = True
+    try:
+        for name, us, derived in run(smoke=smoke, write_json=write_json):
+            print(f"{name},{us:.1f},{derived}")
+    except RuntimeError as e:
+        print(f"serve_events checks VIOLATED: {e}")
+        ok = False
+    print("serve_events checks:", "OK" if ok else "VIOLATED")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

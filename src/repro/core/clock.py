@@ -28,9 +28,15 @@ from __future__ import annotations
 class VirtualClock:
     """A monotonic simulated clock. Call it for "now"; ``advance`` moves it.
 
-    Shared by every pool of a cluster: one global simulation timeline, on
-    which a cluster tick serialises admission prefills and the decode step
-    (the conservative colocated-device model of a tick's latency).
+    Ownership is per-POOL since the event-engine refactor: each fleet
+    replica's prefill and decode pools hold independent ``VirtualClock``
+    timelines that meet only at migration (``Pool.place``) and routing
+    points, so admission prefills overlap concurrent decode
+    (``repro.serving.events``). Sharing ONE instance across both pools
+    remains valid — it recreates the single global timeline on which a
+    cluster tick serialises admission against the decode step (the
+    conservative colocated-device model the single-replica ``Cluster``
+    facade keeps).
     """
 
     def __init__(self, start_s: float = 0.0):

@@ -17,6 +17,7 @@ from repro.serving.autoscaler import (
 from repro.serving.cluster import Cluster
 from repro.serving.controller import ClockController, Transition
 from repro.serving.engine import EOS, PhaseStats, Request, ServingEngine
+from repro.serving.events import EventDrivenFleet
 from repro.serving.fleet import Fleet, Replica, Scheduler
 from repro.serving.paged_cache import NULL_PAGE, BlockAllocator, TrafficCounter
 from repro.serving.pool import Pool
@@ -47,6 +48,7 @@ __all__ = [
     "Scheduler",
     "Replica",
     "Fleet",
+    "EventDrivenFleet",
     "ClockController",
     "Transition",
     "BlockAllocator",

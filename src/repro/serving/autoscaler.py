@@ -4,8 +4,12 @@ The paper's fleet-level consequence: decode parks a 700 W part at
 137–300 W, so the joules a fleet can actually shed live in *which replicas
 are powered*, not in the power cap. PR 4 made drain/power-down a manual
 lever (``Fleet.drain``); this module closes the loop — an ``Autoscaler``
-watches the serving signals every fleet round and decides when to park a
-replica into a diurnal valley and when to power one up ahead of a peak.
+watches the serving signals and decides when to park a replica into a
+diurnal valley and when to power one up ahead of a peak. Under the
+event engine it is ticked by timer events at its own ``tick_interval_s``
+cadence (so hold windows and forecasts see idle valleys AS THEY ELAPSE);
+the barrier driver ticks it once per fleet round and sub-steps idle gaps
+at the same cadence.
 
 Two policies, both deterministic functions of the fleet's visible state
 (so seeded replays stay byte-identical):
@@ -135,8 +139,12 @@ class QueueAutoscaler(_PolicyBase):
 
     def __init__(self, spec: AutoscalerSpec):
         super().__init__(spec)
-        # admissions measured before this instant saw the OLD capacity;
-        # reset on every scale-up so stale breach evidence cannot cascade
+        # evidence measured before this instant saw the OLD capacity;
+        # reset on every scale-up so a stale breach cannot cascade. The
+        # fleet applies it to BOTH populations queue_delay_samples pools:
+        # logged admissions are dropped, and live waiting ages re-measure
+        # from the reset (a backlog queued before the scale-up must not
+        # re-trigger the instant the warm-up window elapses)
         self._ignore_before_s = -math.inf
 
     def tick(self, fleet: "Fleet", now_s: float) -> Optional[Tuple[str, str]]:

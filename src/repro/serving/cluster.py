@@ -34,7 +34,11 @@ With ``clock=VirtualClock()`` the cluster replays in virtual time exactly
 as before: ``run_trace`` releases a seeded arrival trace as simulated time
 crosses each stamp, pools advance the shared clock by modelled step
 durations, idle joules accrue across gaps, and the controller's ``slo``
-mode closes the loop on measured TTFT/TBT percentiles.
+mode closes the loop on measured TTFT/TBT percentiles. Replay now runs on
+the discrete-event engine (``repro.serving.events``) by default; because
+both cluster pools share ONE clock, the event schedule degenerates to the
+legacy round order and tokens/modelled joules are byte-identical to the
+barrier driver (``engine="barrier"``).
 """
 from __future__ import annotations
 
@@ -172,10 +176,15 @@ class Cluster:
         trace: Iterable[TracedRequest],
         *,
         max_steps: int = 1000000,
+        engine: str = "events",
     ) -> List[Request]:
         """Replay an arrival trace on the one replica — subsumed by (and
-        delegated to) ``Fleet.run_trace``."""
-        return self._fleet.run_trace(trace, max_steps=max_steps)
+        delegated to) ``Fleet.run_trace``. ``engine`` picks the driver
+        (``"events"`` or ``"barrier"``); with the cluster's single shared
+        clock the two produce identical token streams and modelled
+        joules, so the facade's behaviour is unchanged either way."""
+        return self._fleet.run_trace(trace, max_steps=max_steps,
+                                     engine=engine)
 
     def run_to_completion(self, max_steps: int = 100000) -> List[Request]:
         return self._replica.run_to_completion(max_steps=max_steps)

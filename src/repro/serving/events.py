@@ -1,0 +1,414 @@
+"""Discrete-event fleet engine: the per-fleet event heap over per-pool clocks.
+
+The barrier driver (``Fleet.step``) advances every busy replica one tick
+per round and syncs all clocks to the slowest — fidelity and throughput are
+both capped by the round. This module replaces the round with a single
+min-heap of events keyed on virtual time: trace arrivals, admission ticks,
+decode steps, warm-up completions and autoscaler evaluations each fire when
+their OWN dependencies are ready. Consequences:
+
+* **Prefill overlaps decode.** Each replica's prefill pool runs on its own
+  ``VirtualClock``; an admission prefill advances only that timeline, and
+  the filled cache row is handed to the decode pool as a *pending
+  placement* that joins the first decode step whose start time has reached
+  the prefill's completion. A long prompt no longer pushes concurrent
+  decode steps later, so prefill-burst TTFT matches a disaggregated
+  deployment instead of a colocated one.
+* **No global rounds.** Replicas interact only through arrivals (routing)
+  and the autoscaler; a fast replica takes as many steps as fit in the
+  time a slow one needs for one.
+* **Fused homogeneous decode.** Decode events that pop at the same virtual
+  time with the same model signature batch through ONE jitted call over a
+  tuple of per-pool argument tuples (each pool still splits its own RNG
+  key and keeps its own accounting, so token streams are independent of
+  grouping); at K aligned replicas this saves K-1 jit dispatches per step.
+
+Event ordering at equal times is fixed by kind priority (warm-up
+completions < arrivals < admissions < decode steps < autoscaler timers)
+then by insertion sequence — the replay is a pure function of the trace.
+
+Semantics notes (parity with the barrier driver where timelines coincide):
+
+* On a fleet whose pools share ONE clock (the single-replica ``Cluster``
+  facade) prefill advances the decode timeline too, placements are always
+  ready by the next decode pop, and the engine reproduces the barrier's
+  step composition — token streams AND modelled joules are identical.
+* Admission credit (``Scheduler``) accrues once per decode step — the
+  barrier's chunked-prefill cadence. Arrival-time admission ticks only
+  SPEND credit (``accrue=False``); an idle replica whose queue head needs
+  more credit than one chunk spins zero-duration admission events, exactly
+  like the barrier's zero-duration rounds.
+* With an autoscaler, a timer event fires every ``tick_interval_s`` so
+  hold windows and forecasts evaluate mid-gap (the barrier driver gets the
+  same via ``Fleet._cross_idle_gap``).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any, Dict, List, Optional, Set, Tuple, TYPE_CHECKING
+
+import jax
+
+from repro.serving.pool import Pool, Request, observe_latencies
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.serving.fleet import Fleet, Replica
+
+__all__ = ["EventDrivenFleet"]
+
+# pop order at equal virtual time: a warm-up that ends exactly when a
+# request arrives must admit it; an admission decided at t feeds the decode
+# step at t; the autoscaler sees the post-step world
+PRIO_WARM, PRIO_ARRIVAL, PRIO_ADMIT, PRIO_DECODE, PRIO_SCALE = range(5)
+
+_EPS = 1e-12
+
+
+class EventDrivenFleet:
+    """One trace replay, event-driven. Build per ``run_trace`` call."""
+
+    def __init__(self, fleet: "Fleet", *, fast_path_min: int = 4):
+        if not fleet.virtual:
+            raise ValueError("the event engine needs VirtualClock replicas")
+        self.fleet = fleet
+        self.fast_path_min = max(2, int(fast_path_min))
+        self._heap: List[Tuple[float, int, int, str, Any]] = []
+        self._seq = 0
+        self._real = 0                     # outstanding non-timer events
+        # per replica: prefilled-but-not-placed rows (ready_s, req, cache1,
+        # first_token) in admission order
+        self._pending: Dict[str, List[Tuple[float, Request, Any, int]]] = {
+            r.name: [] for r in fleet.replicas}
+        # per replica: virtual time of the scheduled decode event, or None
+        self._decode_at: Dict[str, Optional[float]] = {
+            r.name: None for r in fleet.replicas}
+        # per replica: requests placed since its last decode step (the
+        # TTFT population observe_latencies feeds the slo loop)
+        self._obs: Dict[str, List[Request]] = {r.name: [] for r in fleet.replicas}
+        # per replica: outstanding admission events. While one is in flight
+        # an arrival just enqueues — the scheduled tick at >= t will see it,
+        # exactly the barrier's release-then-tick round top
+        self._admit_sched: Dict[str, int] = {r.name: 0 for r in fleet.replicas}
+        self._warm_sched: Set[Tuple[str, float]] = set()
+        self._scale_pending: Set[float] = set()
+        self._fused_cache: Dict[Tuple[Any, ...], Any] = {}
+        self.fused_calls = 0               # jitted multi-pool dispatches
+        self._steps = 0
+        self._tick_interval = 0.0
+        if fleet.autoscaler is not None:
+            self._tick_interval = float(getattr(
+                getattr(fleet.autoscaler, "spec", None),
+                "tick_interval_s", 0.0) or 0.0)
+
+    # ----------------------------------------------------------- heap basics
+    def _push(self, t: float, prio: int, kind: str, payload: Any):
+        heapq.heappush(self._heap, (t, prio, self._seq, kind, payload))
+        self._seq += 1
+        if prio != PRIO_SCALE:
+            self._real += 1
+
+    def _pop(self):
+        ev = heapq.heappop(self._heap)
+        if ev[1] != PRIO_SCALE:
+            self._real -= 1
+        return ev
+
+    def _push_admit(self, name: str, t: float, accrue: bool):
+        self._admit_sched[name] += 1
+        self._push(t, PRIO_ADMIT, "admit", (name, accrue))
+
+    # ------------------------------------------------------------ clock utils
+    @staticmethod
+    def _catch_up(pool: Pool, t: float):
+        """Advance an idle/lagging pool timeline to the event time, sampling
+        so the wait integrates at its gauge power (idle floor when empty)."""
+        if pool.clock.now_s < t:
+            pool.clock.advance_to(t)
+            pool.sample_now()
+
+    # ------------------------------------------------------------------- run
+    def run(self, trace, *, max_steps: int = 1000000) -> List[Request]:
+        fleet = self.fleet
+        pending_trace = sorted(trace, key=lambda t: t.arrival_s)
+        t_start = fleet.now_s()
+        for i, tr in enumerate(pending_trace):
+            self._push(t_start + tr.arrival_s, PRIO_ARRIVAL, "arrival", i)
+        for r in fleet.replicas:
+            if r.powered and r._warming_until_s is not None:
+                self._schedule_warm(r)
+            # work queued/live before run() (Cluster.submit + run_trace)
+            if r.decode_pool.occupancy() > 0:
+                self._ensure_decode(r)
+            elif r.waiting:
+                self._push_admit(r.name, r.max_clock_s(), True)
+        if fleet.autoscaler is not None and self._tick_interval > 0:
+            self._push(t_start + self._tick_interval, PRIO_SCALE, "scale", None)
+        done: List[Request] = []
+        fleet.start_metering()
+        try:
+            while self._heap and self._steps < max_steps:
+                t, prio, _, kind, payload = self._pop()
+                if kind == "decode":
+                    names = [payload]
+                    # batch every decode event at the SAME instant: the
+                    # fused fast path runs homogeneous ones in one jit call
+                    while (self._heap and self._heap[0][1] == PRIO_DECODE
+                           and self._heap[0][0] <= t + _EPS):
+                        names.append(self._pop()[4])
+                    done.extend(self._decode_batch(names, t))
+                elif kind == "arrival":
+                    self._handle_arrival(pending_trace[payload], t)
+                elif kind == "admit":
+                    name, accrue = payload
+                    self._admit_sched[name] -= 1
+                    r = fleet.by_name[name]
+                    self._admit(r, t, accrue=accrue)
+                    self._after_admit(r)
+                elif kind == "warm":
+                    self._handle_warm(fleet.by_name[payload], t)
+                elif kind == "scale":       # the autoscaler's periodic timer
+                    self._handle_scale(t)
+                else:                       # "autoscale": one-shot round end
+                    self._scale_pending.discard(t)
+                    self._autoscale()
+        finally:
+            # pull every pool to the fleet's final time so lagging idle
+            # floors integrate to the horizon the barrier would have reached
+            t_end = fleet.now_s()
+            for r in fleet.replicas:
+                r.advance_all(t_end)
+            fleet.stop_metering()
+        return done
+
+    # --------------------------------------------------------------- arrivals
+    def _handle_arrival(self, tr, t: float):
+        fleet = self.fleet
+        if (fleet.autoscaler is not None and self._tick_interval <= 0
+                and not fleet.busy()):
+            # timer-less mode: the barrier autoscales once at the end of an
+            # all-idle gap, after advancing every clock across it
+            for r in fleet.replicas:
+                r.advance_all(t)
+            self._autoscale()
+        req = fleet.submit(tr.prompt, tr.max_new_tokens,
+                           temperature=tr.temperature, arrival_s=t,
+                           bucket=tr.bucket)
+        r = fleet.by_name[req.replica]
+        if r._warming_until_s is not None and t < r._warming_until_s - _EPS:
+            self._schedule_warm(r)          # admission fires when warm
+        elif self._admit_sched[r.name] == 0:
+            # spend-only tick: credit accrues per decode step (or on a
+            # fresh, fully idle replica — the barrier's first round).
+            # With an admission event already in flight the request just
+            # enqueues: the scheduled tick sees it, the barrier's
+            # release-arrivals-then-tick order at a round top
+            fresh = (self._decode_at[r.name] is None
+                     and not self._pending[r.name])
+            self._admit(r, t, accrue=fresh)
+            self._after_admit(r)
+
+    # -------------------------------------------------------------- admission
+    def _admit(self, r: "Replica", t: float, *, accrue: bool):
+        """One scheduler tick at event time ``t`` on the replica's prefill
+        timeline. Prefilled rows become pending placements; the decode
+        timeline picks them up in ``_flush``."""
+        if not r.powered or (r._warming_until_s is not None
+                             and t < r._warming_until_s - _EPS):
+            return
+        pp, dp = r.prefill_pool, r.decode_pool
+        self._catch_up(pp, t)
+        if not r.waiting:
+            r.scheduler.tick(r.waiting, pp, dp)     # credit reset, empty queue
+            return
+        if r.controller is not None:
+            r._step_no += 1
+            r.controller.tick(r.pools(), r._step_no)
+        pend = self._pending[r.name]
+
+        def gate(req: Request) -> bool:
+            # can_admit, minus capacity already promised to pending rows
+            if len(dp.free_slots()) <= len(pend):
+                return False
+            if dp.paged:
+                need = dp.allocator.blocks_for_tokens(len(req.prompt) + 1)
+                held = sum(dp.allocator.blocks_for_tokens(len(q.prompt) + 1)
+                           for _, q, _, _ in pend)
+                return dp.allocator.can_alloc(need + held)
+            return True
+
+        def admit(req: Request) -> None:
+            first, cache1 = pp.prefill_request(req)
+            pend.append((pp.clock.now_s, req, cache1, first))
+
+        admitted = r.scheduler.tick(r.waiting, pp, dp,
+                                    admit=admit, gate=gate, accrue=accrue)
+        for req in admitted:
+            r.admit_log.append((req.ledger.admitted_s, req.ledger.queue_s))
+        if (r.waiting and not admitted and not pend
+                and self._decode_at[r.name] is None
+                and self._admit_sched[r.name] == 0
+                and dp.occupancy() == 0 and gate(r.waiting[0])
+                and len(r.waiting[0].prompt) > r.scheduler._credit):
+            # idle replica, long head: spin zero-duration admission events
+            # until accrued credit covers the prompt — the barrier's
+            # frozen-clock rounds, bounded at ceil(prompt/chunk) spins
+            self._push_admit(r.name, pp.clock.now_s, True)
+
+    def _flush(self, r: "Replica"):
+        """Place pending prefilled rows whose handoff time the decode
+        timeline has reached; an IDLE decode pool jumps forward to the
+        handoff instead (sampling its gauge across the wait)."""
+        pend = self._pending[r.name]
+        dp = r.decode_pool
+        while pend:
+            ready, req, cache1, first = pend[0]
+            if ready > dp.clock.now_s + _EPS:
+                if dp.occupancy() > 0 or self._decode_at[r.name] is not None:
+                    break                   # joins a later step
+                self._catch_up(dp, ready)
+            pend.pop(0)
+            dp.place(req, cache1, first, len(req.prompt),
+                     first_token_s=ready)
+            self._obs[r.name].append(req)
+
+    def _ensure_decode(self, r: "Replica"):
+        """Schedule the replica's next decode event: now for live slots,
+        the earliest handoff for a pool waiting on its first placement."""
+        if self._decode_at[r.name] is not None:
+            return
+        if r.decode_pool.occupancy() > 0:
+            t = r.decode_pool.clock.now_s
+        elif self._pending[r.name]:
+            # a handoff decided mid-step can be ready before the step's end;
+            # the event still fires at the decode timeline's present
+            t = max(self._pending[r.name][0][0], r.decode_pool.clock.now_s)
+        else:
+            return
+        self._decode_at[r.name] = t
+        self._push(t, PRIO_DECODE, "decode", r.name)
+
+    def _after_admit(self, r: "Replica"):
+        self._flush(r)
+        self._ensure_decode(r)
+
+    # ----------------------------------------------------------- decode steps
+    def _decode_batch(self, names: List[str], t: float) -> List[Request]:
+        fleet = self.fleet
+        reps = [fleet.by_name[n] for n in names]
+        for r in reps:
+            self._decode_at[r.name] = None
+            self._flush(r)
+        live = [r for r in reps if r.decode_pool.occupancy() > 0]
+        for r in live:
+            if r.controller is not None:
+                r._step_no += 1
+                r.controller.tick(r.pools(), r._step_no)
+        finished_by = self._run_decodes(live)
+        done: List[Request] = []
+        for r in live:
+            finished = finished_by[r.name]
+            if r.controller is not None:
+                observe_latencies(r.controller, r.decode_pool,
+                                  self._obs.pop(r.name, []), finished)
+                self._obs[r.name] = []
+            evicted = r.decode_pool.take_evicted()
+            if evicted:
+                r.waiting[:0] = evicted
+            done.extend(finished)
+            self._steps += 1
+            # post-step admission as an ADMIT event at the step's end —
+            # arrivals stamped inside the step pop first (earlier heap
+            # times, lower prio at a tie), so the accrual tick sees them
+            # enqueued: the barrier's release-then-tick round top
+            self._push_admit(r.name, r.decode_pool.clock.now_s, True)
+            self._ensure_decode(r)
+        for r in reps:
+            if r not in live:
+                self._after_admit(r)        # pending handoff still ahead
+        fleet._power_down_drained()
+        if (fleet.autoscaler is not None and self._tick_interval <= 0
+                and live):
+            # timer-less mode evaluates once per "round", after the round's
+            # admissions land — a one-shot event behind the admit events
+            t_end = max(r.decode_pool.clock.now_s for r in live)
+            if t_end not in self._scale_pending:
+                self._scale_pending.add(t_end)
+                self._push(t_end, PRIO_SCALE, "autoscale", None)
+        return done
+
+    def _run_decodes(self, live: List["Replica"]) -> Dict[str, List[Request]]:
+        """Run one decode step on every live replica; homogeneous dense
+        groups of >= fast_path_min pools sharing one params object go
+        through one fused jitted call."""
+        finished_by: Dict[str, List[Request]] = {}
+        groups: Dict[Tuple[Any, ...], List[Replica]] = {}
+        for r in live:
+            dp = r.decode_pool
+            sig = (dp.cfg.name, id(dp.params), dp.paged, dp.max_batch,
+                   dp.max_seq_len)
+            groups.setdefault(sig, []).append(r)
+        for sig, rs in groups.items():
+            if not sig[2] and len(rs) >= self.fast_path_min:
+                finished_by.update(self._decode_fused(sig, rs))
+            else:
+                for r in rs:
+                    finished_by[r.name] = r.decode_pool.decode_once()
+        return finished_by
+
+    def _decode_fused(self, sig, reps: List["Replica"]) -> Dict[str, List[Request]]:
+        """One jitted step over K homogeneous dense pools: the per-pool
+        argument tuples form one pytree argument, so K XLA dispatches
+        collapse into one. Each pool's key split, sampling and accounting
+        are byte-for-byte the per-pool path's — only dispatch is shared."""
+        self.fused_calls += 1
+        pools = [r.decode_pool for r in reps]
+        pres = [p._decode_begin() for p in pools]
+        fn = self._fused_cache.get((sig, len(reps)))
+        if fn is None:
+            impl = pools[0]._decode_impl    # pure in cfg; shared across group
+
+            def fused(params, per_pool):
+                return tuple(impl(params, *args) for args in per_pool)
+
+            fn = jax.jit(fused)
+            self._fused_cache[(sig, len(reps))] = fn
+        outs = fn(pools[0].params, tuple(pre["args"][1:] for pre in pres))
+        return {r.name: p._decode_finish(pre, *out)
+                for r, p, pre, out in zip(reps, pools, pres, outs)}
+
+    # ------------------------------------------------------ warm / autoscaler
+    def _schedule_warm(self, r: "Replica"):
+        key = (r.name, r._warming_until_s)
+        if key not in self._warm_sched:
+            self._warm_sched.add(key)
+            self._push(r._warming_until_s, PRIO_WARM, "warm", r.name)
+
+    def _handle_warm(self, r: "Replica", t: float):
+        self._warm_sched.discard((r.name, t))
+        if not r.powered or r._warming_until_s is None:
+            return                          # powered down / already warm
+        if t < r._warming_until_s - _EPS:
+            self._schedule_warm(r)          # window moved; fire later
+            return
+        for p in r.pools().values():        # warm-up idle watts accrue
+            self._catch_up(p, t)
+        r._warming_until_s = None
+        self.fleet._record_scale(t, "warm", r, "warm-up window elapsed")
+        if self._admit_sched[r.name] == 0:
+            self._admit(r, t, accrue=True)
+            self._after_admit(r)
+
+    def _handle_scale(self, t: float):
+        fleet = self.fleet
+        for r in fleet.replicas:            # queue ages measure against t
+            r.advance_all(t)
+        self._autoscale()
+        if self._real > 0 or fleet.busy():
+            self._push(t + self._tick_interval, PRIO_SCALE, "scale", None)
+
+    def _autoscale(self):
+        fleet = self.fleet
+        fleet._autoscale()
+        for r in fleet.replicas:
+            if r.powered and r._warming_until_s is not None:
+                self._schedule_warm(r)

@@ -24,17 +24,28 @@ runtime pieces of the spec-first fleet API (``repro.serving.spec``):
   the serving clock crosses their stamps, the router picks each request's
   replica, and every busy replica takes one tick per round.
 
-Timeline model: replicas are separate devices, so they tick CONCURRENTLY —
-in virtual mode each replica advances its own ``VirtualClock`` through its
-tick, and the fleet syncs all clocks to the round maximum at a barrier
-(idle and faster replicas burn their gauge power across the lag, so a
-powered-up replica is never free — what makes power-down-vs-underclock an
-honest comparison). One fleet round therefore costs the *slowest busy
-replica's* tick, not the sum. WITHIN a replica, admission prefills and the
-decode step still serialise on its clock — PR 3's conservative
-colocated-device view; overlapped per-pool timelines stay on the roadmap.
+Timeline model: replicas are separate devices, and since the event-engine
+refactor each POOL owns its timeline — ``Fleet.from_spec`` gives every
+replica a decode ``VirtualClock`` and an independent prefill
+``VirtualClock`` that meet only at migration (``place``). Two drivers run
+the same replicas:
+
+* ``run_trace(engine="events")`` (default) — the discrete-event engine in
+  ``repro.serving.events``: arrivals, admissions, decode steps, warm-up
+  completions and autoscaler evaluations pop from one per-fleet heap in
+  virtual-time order, so admission prefills genuinely overlap concurrent
+  decode and nothing waits for the slowest replica's round.
+* ``step()`` / ``run_trace(engine="barrier")`` — the legacy lockstep
+  driver: every busy replica takes one concurrent tick, the fleet syncs
+  all pool clocks to the round maximum at a barrier (idle and faster
+  replicas burn their gauge power across the lag, so a powered-up replica
+  is never free — what makes power-down-vs-underclock an honest
+  comparison), and WITHIN a replica admission serialises against decode
+  (``Replica.sync_clocks``) — PR 3's conservative colocated-device view.
+
 A fleet built around one shared clock (the single-replica ``Cluster``
-facade) degenerates to exactly the pre-fleet behaviour.
+facade) keeps both pools on one timeline; under the barrier driver that
+degenerates to exactly the pre-fleet behaviour.
 """
 from __future__ import annotations
 
@@ -87,14 +98,38 @@ class Scheduler:
         waiting: List[Request],
         prefill_pool: Pool,
         decode_pool: Pool,
+        *,
+        admit: Optional[Callable[[Request], None]] = None,
+        gate: Optional[Callable[[Request], bool]] = None,
+        accrue: bool = True,
     ) -> List[Request]:
+        """One admission tick. The three keyword hooks exist for the event
+        engine: ``admit`` replaces the default prefill-then-place handoff
+        (the engine defers placement until the decode timeline reaches the
+        prefill's completion), ``gate`` replaces ``decode_pool.can_admit``
+        (the engine must also count placements still in flight), and
+        ``accrue=False`` spends existing credit without banking more (the
+        engine calls extra ticks at arrival events; credit still accrues
+        once per decode step, the barrier's cadence)."""
         if not waiting:
             self._credit = 0.0
             return []
+        if gate is None:
+            gate = decode_pool.can_admit
+        if admit is None:
+            def admit(req: Request) -> None:
+                first, cache1 = prefill_pool.prefill_request(req)
+                decode_pool.place(
+                    req, cache1, first, len(req.prompt),
+                    # with split pool clocks the first token exists when the
+                    # PREFILL timeline produced it; on a shared clock this
+                    # is exactly the legacy stamp
+                    first_token_s=(prefill_pool.clock()
+                                   if prefill_pool.virtual else None))
         validated_head = head_validator(waiting, decode_pool)
         # fail fast even when admission is impossible this tick
         head = validated_head()
-        if decode_pool.can_admit(head):
+        if gate(head) and accrue:
             # accrue only while admission is possible, capped at
             # max(chunk, head need) — a full decode pool must not bank
             # credit that later releases one giant prefill burst.
@@ -105,15 +140,14 @@ class Scheduler:
                 max(float(self.chunk_tokens), float(len(head.prompt))),
             )
         admitted: List[Request] = []
-        while waiting and decode_pool.can_admit(waiting[0]):
+        while waiting and gate(waiting[0]):
             req = validated_head()
             need = len(req.prompt)
             if need > self._credit:
                 break
             waiting.pop(0)
             self._credit -= need
-            first, cache1 = prefill_pool.prefill_request(req)
-            decode_pool.place(req, cache1, first, need)
+            admit(req)
             self.migrations += 1
             admitted.append(req)
         return admitted
@@ -135,6 +169,7 @@ class Replica:
         prefill_chunk_tokens: int = 256,
         rng_seed: int = 0,
         clock: Callable[[], float] = time.perf_counter,
+        prefill_clock: Optional[Callable[[], float]] = None,
         meter_interval_s: float = 0.050,
         paged: bool = False,
         kv_block_size: int = 16,
@@ -143,9 +178,19 @@ class Replica:
         self.cfg = cfg
         self.name = name
         self.arch = cfg.name
+        # per-pool timelines: ``clock`` is the decode pool's (and the
+        # replica's reference clock); ``prefill_clock`` defaults to the same
+        # object — the legacy colocated-device view where admission prefills
+        # serialise against decode. Pass a second VirtualClock to give the
+        # prefill pool an independent timeline (the event engine's overlap).
+        self.prefill_clock = prefill_clock if prefill_clock is not None else clock
+        if isinstance(self.prefill_clock, VirtualClock) != isinstance(clock, VirtualClock):
+            raise ValueError(
+                "replica pool clocks must be both virtual or both wall")
         self.prefill_pool = Pool(
             cfg, params, role="prefill", max_batch=max(1, prefill_batch),
-            max_seq_len=max_seq_len, rng_seed=rng_seed, clock=clock,
+            max_seq_len=max_seq_len, rng_seed=rng_seed,
+            clock=self.prefill_clock,
             meter_interval_s=meter_interval_s,
         )
         # only the decode pool pages its cache: prefill is batch-1 scratch
@@ -187,6 +232,7 @@ class Replica:
         *,
         emodel=None,
         clock: Callable[[], float] = time.perf_counter,
+        prefill_clock: Optional[Callable[[], float]] = None,
         params: Any = None,
         meter_interval_s: float = 0.050,
     ) -> "Replica":
@@ -218,6 +264,7 @@ class Replica:
             prefill_chunk_tokens=spec.prefill_chunk_tokens,
             rng_seed=spec.rng_seed,
             clock=clock,
+            prefill_clock=prefill_clock,
             meter_interval_s=meter_interval_s,
             paged=spec.decode.paged,
             kv_block_size=spec.decode.kv_block_size,
@@ -250,9 +297,47 @@ class Replica:
     def pools(self) -> Dict[str, Pool]:
         return {"prefill": self.prefill_pool, "decode": self.decode_pool}
 
+    def sync_clocks(self):
+        """Pull this replica's pool clocks to their shared maximum, sampling
+        each laggard so the wait integrates at its gauge power. A no-op when
+        both pools share one clock (the legacy Cluster arrangement) or on
+        wall clocks — the barrier driver calls this to keep its serialised
+        within-replica semantics under split pool clocks."""
+        if not self.virtual:
+            return
+        t = max(p.clock.now_s for p in self.pools().values())
+        for p in self.pools().values():
+            if p.clock.now_s < t:
+                p.clock.advance_to(t)
+                p.sample_now()
+
+    def max_clock_s(self) -> float:
+        """The furthest-ahead pool timeline on this replica."""
+        if not self.virtual:
+            return self.clock()
+        return max(p.clock.now_s for p in self.pools().values())
+
+    def advance_all(self, t1: float):
+        """Advance every lagging pool clock to ``t1`` and (if any moved)
+        sample both pools — the barrier's round sync, per replica."""
+        if not self.virtual:
+            return
+        moved = False
+        for p in self.pools().values():
+            if p.clock.now_s < t1:
+                p.clock.advance_to(t1)
+                moved = True
+        if moved:
+            self.sample_pools()
+
     def step(self) -> List[Request]:
-        """One replica tick: retune clocks, admit/migrate, decode."""
+        """One replica tick: retune clocks, admit/migrate, decode. This is
+        the BARRIER driver's body: admission prefills serialise against the
+        decode step on one timeline (``sync_clocks`` after admission), the
+        legacy colocated-device view. The event engine overlaps the two
+        timelines instead — see ``repro.serving.events``."""
         self._step_no += 1
+        self.sync_clocks()
         if self.warming():
             # inside the warm-up window: idle-floor watts accrue (the
             # barrier samples this replica's pools) but nothing admits —
@@ -267,6 +352,9 @@ class Replica:
             # admission changed decode occupancy: re-resolve so this step's
             # tokens are priced at the true post-admission operating point
             self.controller.tick(self.pools(), self._step_no)
+        # under split pool clocks the prefill timeline ran ahead: the
+        # barrier's decode step starts only after admission completes
+        self.sync_clocks()
         finished = self.decode_pool.decode_once()
         if self.controller is not None:
             observe_latencies(self.controller, self.decode_pool, admitted, finished)
@@ -400,7 +488,8 @@ class Fleet:
         if len(virtuals) != 1:
             raise ValueError("fleet replicas must be all-virtual or all-wall")
         self.virtual = virtuals.pop()
-        if not self.virtual and len({id(r.clock) for r in self.replicas}) != 1:
+        if not self.virtual and len({id(c) for r in self.replicas
+                                     for c in (r.clock, r.prefill_clock)}) != 1:
             # wall-clock replicas tick on real time; only one process clock
             # keeps their ledgers on one timeline
             raise ValueError("wall-clock fleet replicas must share one clock")
@@ -444,20 +533,22 @@ class Fleet:
         one initialisation instead of paying it per replica.
         """
         if clock is None:
-            # one VirtualClock per replica: separate devices, concurrent
-            # ticks, barrier-synced by the fleet round
-            clocks: List[Callable[[], float]] = [
-                VirtualClock() for _ in spec.replicas]
+            # TWO VirtualClocks per replica — decode and prefill are
+            # separate timelines (separate devices, and within a replica
+            # the pools only meet at migration): the event engine overlaps
+            # them, the barrier driver re-serialises via sync_clocks
+            clock_pairs: List[Tuple[Callable[[], float], Callable[[], float]]] = [
+                (VirtualClock(), VirtualClock()) for _ in spec.replicas]
         else:
-            clocks = [clock] * len(spec.replicas)
+            clock_pairs = [(clock, clock)] * len(spec.replicas)
         params_for = params_for or {}
         replicas = [
             Replica.from_spec(
-                rs, emodel=emodel, clock=c,
+                rs, emodel=emodel, clock=c, prefill_clock=pc,
                 params=params_for.get(rs.arch),
                 meter_interval_s=meter_interval_s,
             )
-            for rs, c in zip(spec.replicas, clocks)
+            for rs, (c, pc) in zip(spec.replicas, clock_pairs)
         ]
         return cls(
             replicas,
@@ -504,24 +595,22 @@ class Fleet:
 
     def now_s(self) -> float:
         """The fleet timeline's current time. Replica clocks agree at round
-        barriers; between them the furthest-ahead replica defines "now"."""
+        barriers; between them the furthest-ahead pool defines "now"."""
         if self.virtual:
-            return max(r.clock.now_s for r in self.replicas)
+            return max(r.max_clock_s() for r in self.replicas)
         return self.clock()
 
     def _sync_round(self):
-        """Barrier: pull every lagging replica clock up to the round's
+        """Barrier: pull every lagging pool clock up to the round's
         maximum, sampling its pools so the lag integrates at gauge power —
         op power while slots are live, the idle floor (or a powered-down
         replica's zero watts) otherwise. With one shared clock this is a
         no-op and ticks stay serialised (the Cluster facade's behaviour)."""
         if not self.virtual:
             return
-        t1 = max(r.clock.now_s for r in self.replicas)
+        t1 = max(r.max_clock_s() for r in self.replicas)
         for r in self.replicas:
-            if r.clock.now_s < t1:
-                r.clock.advance_to(t1)
-                r.sample_pools()
+            r.advance_all(t1)
 
     def step(self) -> List[Request]:
         """One fleet round — the single definition of round semantics, also
@@ -545,26 +634,40 @@ class Fleet:
             if ends:
                 t1 = min(ends)
                 for r in self.replicas:
-                    if r.clock.now_s < t1:
-                        r.clock.advance_to(t1)
-                        r.sample_pools()
+                    r.advance_all(t1)
         self._power_down_drained()
         self._autoscale()
         return finished
 
     def drain(self, name: str):
-        self.by_name[name].drain()
+        """Operator-driven drain — audited exactly like an autoscaler
+        decision (``scale_events`` + the controller's Transition trail),
+        with policy ``"manual"``."""
+        r = self.by_name[name]
+        was_powered = r.powered
+        r.drain()
+        now = self.now_s()
+        self._record_scale(now, "drain", r, "operator drain", policy="manual")
+        if was_powered and not r.powered:
+            self._record_scale(now, "power_down", r, "drained dry",
+                               policy="manual")
 
-    def power_up(self, name: str):
-        self.by_name[name].power_up()
+    def power_up(self, name: str, warmup_s: float = 0.0):
+        """Operator-driven power-up/reclaim — audited with policy
+        ``"manual"`` (a powered replica still draining rejoins as a
+        ``reclaim``, matching the autoscaler's vocabulary)."""
+        r = self.by_name[name]
+        action = "reclaim" if (r.powered and r.draining) else "power_up"
+        r.power_up(warmup_s=warmup_s)
+        self._record_scale(self.now_s(), action, r, "operator power_up",
+                           policy="manual", configured=warmup_s)
 
     def _power_down_drained(self):
         for r in self.replicas:
             if r.draining and r.powered and not r.busy():
                 r.power_down()
-                if self.autoscaler is not None:
-                    self._record_scale(self.now_s(), "power_down", r,
-                                       "drained dry")
+                self._record_scale(self.now_s(), "power_down", r,
+                                   "drained dry")
 
     # --------------------------------------------------------- autoscaling
     def n_active(self) -> int:
@@ -595,22 +698,37 @@ class Fleet:
         for r in self.replicas:
             xs.extend(q for t, q in r.admit_log
                       if t >= cut and q is not None)
-            xs.extend(now_s - req.ledger.arrival_s for req in r.waiting
+            # live waiting ages measure from max(arrival, since_s): queueing
+            # that predates a scale-up's evidence reset saw the OLD capacity
+            # and must not re-trigger the next scale-up the instant the
+            # warm-up window elapses (the cascade bug) — only the age the
+            # backlog has accrued SINCE the reset is admissible evidence
+            xs.extend(max(0.0, now_s - max(req.ledger.arrival_s, since_s))
+                      for req in r.waiting
                       if req.ledger.arrival_s is not None)
         return xs
 
     def _record_scale(self, now_s: float, action: str, replica: Replica,
-                      reason: str):
-        policy = self.autoscaler.name if self.autoscaler is not None else "manual"
+                      reason: str, *, policy: Optional[str] = None,
+                      configured: Optional[float] = None):
+        """Append to the scale ledger and the replica controller's
+        Transition trail. ``policy`` overrides the attributed policy name
+        (``"manual"`` for operator-driven changes on an autoscaled fleet);
+        ``configured`` overrides the warm-up seconds attributed to a
+        power-up (default: the autoscaler's, 0 otherwise)."""
+        if configured is None:
+            configured = (self.autoscaler.warmup_s
+                          if self.autoscaler is not None and policy is None
+                          and action == "power_up" else 0.0)
+        if policy is None:
+            policy = (self.autoscaler.name if self.autoscaler is not None
+                      else "manual")
         self.scale_events.append(ScaleEvent(
             t_s=now_s, action=action, replica=replica.name,
             policy=policy, reason=reason))
         if replica.controller is not None:
-            warmup = (self.autoscaler.warmup_s
-                      if self.autoscaler is not None and action == "power_up"
-                      else 0.0)
             replica.controller.note_scale_event(
-                self._round, action, configured=warmup)
+                self._round, action, configured=configured)
 
     def _pick_power_up(self) -> Optional[Replica]:
         """The cheapest capacity to add, deterministically: a powered
@@ -689,16 +807,44 @@ class Fleet:
         if self.virtual:
             target = self.now_s() + dt_s
             for r in self.replicas:
-                r.clock.advance_to(target)
+                for p in r.pools().values():
+                    p.clock.advance_to(target)
                 r.sample_pools()
         else:
             time.sleep(dt_s)
+
+    def _cross_idle_gap(self, gap_s: float):
+        """Cross an all-idle stretch between arrivals. With an autoscaler
+        the gap is sub-stepped at its ``tick_interval_s`` cadence (bounded
+        at 10k sub-steps) so ``hold_s`` hysteresis windows and the Holt
+        forecast's sampling see the valley AS IT ELAPSES — a sustained-slack
+        drain fires mid-gap, not at the gap's edge. Without an autoscaler a
+        single jump accrues the idle joules exactly (piecewise-constant
+        power integrates the same either way)."""
+        if gap_s <= 0:
+            return
+        tick = 0.0
+        if self.autoscaler is not None:
+            tick = float(getattr(getattr(self.autoscaler, "spec", None),
+                                 "tick_interval_s", 0.0) or 0.0)
+        if not self.virtual or tick <= 0.0 or gap_s <= tick:
+            self._advance_idle(gap_s)
+            self._autoscale()
+            return
+        step = max(tick, gap_s / 10_000.0)
+        left = gap_s
+        while left > 1e-12:
+            d = min(step, left)
+            self._advance_idle(d)
+            self._autoscale()
+            left -= d
 
     def run_trace(
         self,
         trace: Iterable[TracedRequest],
         *,
         max_steps: int = 1000000,
+        engine: str = "events",
     ) -> List[Request]:
         """Replay an arrival trace across the fleet: each entry joins the
         router-chosen replica's queue when the serving clock crosses its
@@ -706,11 +852,29 @@ class Fleet:
         the whole replay is deterministic — service time is the modelled
         step time at each pool's live operating point, and idle joules
         accrue across arrival gaps on every powered replica.
+
+        ``engine`` picks the driver:
+
+        * ``"events"`` (default) — the discrete-event engine
+          (``repro.serving.events``): arrivals, admissions, decode steps,
+          warm-up completions and autoscaler evaluations fire from one
+          per-fleet heap in virtual-time order, per-pool timelines overlap
+          prefill with decode, and homogeneous replica decode steps batch
+          through one fused jitted call. Wall-clock fleets fall back to the
+          barrier (real time cannot be event-skipped).
+        * ``"barrier"`` — the legacy lockstep driver: every busy replica
+          takes one tick per round and the round syncs to the slowest.
         """
         if self.virtual and any(r.controller is None for r in self.replicas):
             raise ValueError(
                 "virtual-time replay needs a ClockController: without an "
                 "operating point the pools cannot model step durations")
+        if engine not in ("events", "barrier"):
+            raise ValueError(f"unknown engine {engine!r}: "
+                             "expected 'events' or 'barrier'")
+        if engine == "events" and self.virtual:
+            from repro.serving.events import EventDrivenFleet
+            return EventDrivenFleet(self).run(trace, max_steps=max_steps)
         pending = sorted(trace, key=lambda t: t.arrival_s)
         t_start = self.now_s()
         done: List[Request] = []
@@ -731,10 +895,10 @@ class Fleet:
                     if i >= len(pending):
                         break
                     # nothing in flight anywhere: idle until the next
-                    # arrival; the autoscaler still ticks so a diurnal
-                    # valley's sustained slack can drain replicas mid-gap
-                    self._advance_idle(pending[i].arrival_s - now)
-                    self._autoscale()
+                    # arrival; the autoscaler ticks at its own cadence
+                    # inside the gap so a diurnal valley's sustained slack
+                    # drains replicas mid-gap
+                    self._cross_idle_gap(pending[i].arrival_s - now)
                     continue
                 steps += sum(r.busy() for r in self.replicas)
                 done.extend(self.step())

@@ -653,12 +653,16 @@ class Pool:
         req.prefill_j += joules
         return first, cache1
 
-    def place(self, req: Request, cache1: Any, first_token: int, length: int) -> int:
+    def place(self, req: Request, cache1: Any, first_token: int, length: int,
+              *, first_token_s: Optional[float] = None) -> int:
         """Scatter a filled batch-1 cache row into a free slot (migration).
 
         Paged pools allocate the request's block table first and scatter by
         page (copy-on-migrate); the handoff the decode step sees is purely
-        the table row."""
+        the table row. ``first_token_s`` overrides the first-token stamp:
+        with per-pool clocks the prefill timeline produced the token at its
+        own (earlier) time, and the event engine may place the row after
+        the decode timeline has moved past it."""
         free = self.free_slots()
         if not free:
             raise RuntimeError("place() on a full pool — check can_admit() first")
@@ -687,7 +691,8 @@ class Pool:
         self._admit_seq[slot] = self._admit_counter
         self._slot_temp[slot] = req.temperature
         req.output.append(first_token)
-        req.ledger.mark_first_token(self.clock())
+        req.ledger.mark_first_token(
+            self.clock() if first_token_s is None else first_token_s)
         self.slot_req[slot] = req
         self.peak_occupancy = max(self.peak_occupancy, self.occupancy())
         self._refresh_gauge()
@@ -696,31 +701,53 @@ class Pool:
     def _req_eos(self, req: Request) -> int:
         return self.eos_token_id if req.eos_token_id is None else req.eos_token_id
 
-    def decode_once(self) -> List[Request]:
-        """One jitted decode step over all slots; returns finished requests.
-
-        Paged pools grow/evict block tables first, then account the step's
-        traffic block-accurately and derive decode joules from it."""
+    def _decode_begin(self) -> Optional[dict]:
+        """Host-side first half of ``decode_once``: block-table growth,
+        active mask, RNG split, and the jitted-call argument tuple. Returns
+        ``None`` when no slot is live. ``decode_once`` composes this with
+        the jit call and ``_decode_finish``; the split exists so the fleet's
+        event engine can run many homogeneous pools' decode updates through
+        ONE fused jitted step (each pool still splits its own key, so token
+        streams are independent of how steps are grouped)."""
         if self.paged and any(r is not None for r in self.slot_req):
             self._grow_tables()
         active = self.active_mask()
-        finished: List[Request] = []
         if not active.any():
-            return finished
+            return None
         self._ensure_decode_state()
         self._key, sub = jax.random.split(self._key)
         temps = jnp.asarray(self._slot_temp)
         t0 = self.clock()
         if self.paged:
-            next_tok, self.cache, self.lengths = self._jit_decode_paged(
-                self.params, self.cur_token, self.cache, self.lengths,
-                jnp.asarray(active), jnp.asarray(self.block_tables), sub, temps,
-            )
+            args = (self.params, self.cur_token, self.cache, self.lengths,
+                    jnp.asarray(active), jnp.asarray(self.block_tables), sub,
+                    temps)
         else:
-            next_tok, self.cache, self.lengths = self._jit_decode(
-                self.params, self.cur_token, self.cache, self.lengths,
-                jnp.asarray(active), sub, temps,
-            )
+            args = (self.params, self.cur_token, self.cache, self.lengths,
+                    jnp.asarray(active), sub, temps)
+        return {"active": active, "t0": t0, "args": args}
+
+    def decode_once(self) -> List[Request]:
+        """One jitted decode step over all slots; returns finished requests.
+
+        Paged pools grow/evict block tables first, then account the step's
+        traffic block-accurately and derive decode joules from it."""
+        pre = self._decode_begin()
+        if pre is None:
+            return []
+        jit_fn = self._jit_decode_paged if self.paged else self._jit_decode
+        next_tok, cache, lengths = jit_fn(*pre["args"])
+        return self._decode_finish(pre, next_tok, cache, lengths)
+
+    def _decode_finish(self, pre: dict, next_tok, cache, lengths) -> List[Request]:
+        """Second half of ``decode_once``: adopt the jitted step's outputs,
+        advance the (virtual) clock by the modelled step duration, and do
+        the per-slot token/energy/EOS accounting."""
+        self.cache = cache
+        self.lengths = lengths
+        active = pre["active"]
+        t0 = pre["t0"]
+        finished: List[Request] = []
         next_np = np.asarray(next_tok)
         if self.virtual and self.op is not None:
             # the modelled step duration at the live operating point IS the
