@@ -23,6 +23,7 @@ def main() -> None:
         serve_cluster,
         serve_events,
         serve_fleet,
+        serve_scale,
         serve_trace,
         table1_power_cap,
         tpu_native,
@@ -41,6 +42,7 @@ def main() -> None:
         serve_fleet,
         serve_autoscale,
         serve_events,
+        serve_scale,
         tpu_native,
         kernels_micro,
         roofline_report,

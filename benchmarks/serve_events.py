@@ -97,15 +97,21 @@ def make_fleet(n=N_REPLICAS, *, batch=BATCH, max_seq_len=MAX_SEQ_LEN,
 def wave_trace(n_requests: int):
     """Waves of ``N_REPLICAS`` identical prompts at one-step cadence: JSQ
     spreads one per replica, the replicas stay in lockstep, and every
-    decode instant is shared fleet-wide — the fused fast path's shape."""
+    decode instant is shared fleet-wide — the fused fast path's shape.
+
+    Returns ``(trace, dropped)``: requests that don't fill a whole wave
+    are dropped (a partial wave would break the alignment the benchmark
+    is asserting) — callers must surface ``dropped`` instead of silently
+    reporting the requested count."""
     rng = np.random.default_rng(TRACE_SEED)
     prompt = rng.integers(1, 100, PROMPT_LEN).astype(np.int32)
     n_waves = n_requests // N_REPLICAS
-    return [
+    trace = [
         TracedRequest(arrival_s=w * WAVE_DT_S, prompt=prompt,
                       max_new_tokens=MAX_NEW, bucket="mixed")
         for w in range(n_waves) for _ in range(N_REPLICAS)
     ]
+    return trace, n_requests - len(trace)
 
 
 def burst_trace():
@@ -139,19 +145,20 @@ def replay(trace):
                    for r in done],
         "measured_j": fleet.measured_energy_j(),
     }, sort_keys=True)
+    st = eng.stats
     metrics = {
         "completed": len(done),
         "requests": len(trace),
         "replicas": len(fleet.replicas),
         "decode_steps": eng._steps,
         "fused_calls": eng.fused_calls,
-        "fused_step_pct": (100.0 * eng.fused_calls * len(fleet.replicas)
-                           / max(eng._steps, 1)),
+        "fused_step_pct": 100.0 * st.fused_decode_coverage,
         "decode_tokens": fleet.stats.decode_tokens,
         "total_j": fleet.total_energy_j(),
         "p50_ttft_s": lat.p50_ttft_s,
         "p99_ttft_s": lat.p99_ttft_s,
         "p99_tbt_s": lat.p99_tbt_s,
+        "engine_stats": st.as_dict(),
     }
     return metrics, hashlib.sha256(blob.encode()).hexdigest(), wall_s
 
@@ -159,9 +166,12 @@ def replay(trace):
 def run(smoke: bool = False, write_json: bool = False):
     """Harness contract: yields (name, us_per_call, derived) rows; raises
     on any violated completion/determinism/fusion/overlap assertion."""
-    n_requests = 2_000 if smoke else 100_000
-    trace = wave_trace(n_requests)
+    n_requested = 2_000 if smoke else 100_000
+    trace, dropped = wave_trace(n_requested)
     n_requests = len(trace)             # whole waves only
+    if dropped:
+        print(f"serve_events: dropped {dropped} of {n_requested} requests "
+              f"(whole {N_REPLICAS}-request waves only)", file=sys.stderr)
 
     out_rows = []
     violations = []
@@ -171,7 +181,8 @@ def run(smoke: bool = False, write_json: bool = False):
     out_rows.append((
         "serve_events/replay",
         1e6 * wall_a / n_requests,
-        f"requests={n_requests};replicas={first['replicas']};"
+        f"requests={n_requests};dropped={dropped};"
+        f"replicas={first['replicas']};"
         f"steps={first['decode_steps']};total_j={first['total_j']:.3f};"
         f"p99_ttft_ms={1e3 * first['p99_ttft_s']:.3f};"
         f"wall_s={wall_a:.1f}",
@@ -243,7 +254,8 @@ def run(smoke: bool = False, write_json: bool = False):
     if write_json:
         write_bench_json(
             "serve_events", results, smoke=smoke, path=JSON_PATH,
-            trace={"n": n_requests, "shape": "aligned-waves",
+            trace={"n": n_requests, "n_requested": n_requested,
+                   "dropped": dropped, "shape": "aligned-waves",
                    "wave_dt_s": WAVE_DT_S, "prompt_len": PROMPT_LEN,
                    "max_new": MAX_NEW, "seed": TRACE_SEED},
         )

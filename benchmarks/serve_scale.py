@@ -1,0 +1,347 @@
+"""Event-engine scale gate: 10^6 requests over a 100-replica mixed fleet.
+
+PR-6's event heap made a 16-replica / 10^5-request replay tractable; this
+benchmark is the acceptance gate for the next order of magnitude, where
+the per-request cost must be O(event-loop bookkeeping), not O(jit
+dispatch). The levers under test (``repro.serving.events`` +
+``repro.serving.pool``):
+
+    fused admission prefill   same-instant admission ticks defer their
+                              ``_jit_prefill`` dispatches; the engine runs
+                              one grouped program per (config, params,
+                              bucket) and replays per-request accounting
+                              byte-identically
+    fusion quantum            decode events inside ``[t, t+q)`` share one
+                              dispatch even when replica clocks have
+                              drifted off exact ties
+    pow2 group bucketing      fused program cache stays O(log fleet) on a
+                              drifting fleet instead of one trace per
+                              group size
+    allocation-free loops     request/ledger freelists + ``on_finish``
+                              streaming keep the replay memory-flat;
+                              round-robin routing is O(1) per arrival
+
+Fleet: 88 gemma-class + 12 minicpm-class replicas (heterogeneous groups
+fuse within themselves). Trace: an aligned phase (waves of one request
+per replica at one-step cadence — the fused fast path's shape) followed
+by a drifted phase (mixed prompt lengths, jittered arrivals — the shape
+only the quantum window and pow2 bucketing keep fused).
+
+Asserted:
+
+    scale       all requests complete; double replay streams to the SAME
+                sha256 (outputs + ledger stamps + measured joules)
+    aligned     >= 80% of decode pool-steps ran through fused dispatches
+                on the aligned phase
+    dispatch    jit dispatches/request with full fusion strictly below
+                the PR-6 dispatch pattern (serial admission prefill,
+                exact-tie-only decode fusion) on the same trace, and
+                under an absolute ceiling
+    quantum     ``fusion_quantum_s=0`` replays byte-identical to the
+                exact-tie engine; a positive quantum changes no token
+    wall        slowest full replay fits the budget
+                (REPRO_SCALE_TIME_BUDGET_S, default 3600 s; 0 waives)
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_scale            # full
+  or: PYTHONPATH=src python -m benchmarks.serve_scale --smoke    # CI tier
+  add --json to write BENCH_serve_scale.json (schema-versioned artefact)
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import h200_model, write_bench_json, write_csv
+from repro.configs import reduced_config
+from repro.core.traces import TracedRequest
+from repro.models import init_params
+from repro.serving import ClockSpec, Fleet, FleetSpec, PoolSpec, ReplicaSpec
+from repro.serving.pool import release_request
+
+ARCH_MAIN = "gemma-2b"
+ARCH_ALT = "minicpm-2b"
+N_MAIN = 88
+N_ALT = 12
+N_REPLICAS = N_MAIN + N_ALT
+BATCH = 8
+MAX_SEQ_LEN = 64
+CHUNK_TOKENS = 64
+PROMPT_LEN = 16
+MAX_NEW = 4
+WAVE_DT_S = 0.0021                  # ~ one locked-clock decode step
+QUANTUM_S = 0.0005                  # ~ a quarter step: re-fuses drift
+TRACE_SEED = 23
+DISPATCH_CEILING = 1.5              # jit dispatches per request, full run
+JSON_PATH = "BENCH_serve_scale.json"
+# wall-clock budget for ONE full replay; 0 waives
+TIME_BUDGET_S = float(os.environ.get("REPRO_SCALE_TIME_BUDGET_S", "3600"))
+
+_PARAMS_CACHE = {}
+
+
+def params_for():
+    for arch in (ARCH_MAIN, ARCH_ALT):
+        if arch not in _PARAMS_CACHE:
+            _PARAMS_CACHE[arch] = init_params(
+                reduced_config(arch), jax.random.PRNGKey(0))
+    return _PARAMS_CACHE
+
+
+def make_fleet() -> Fleet:
+    archs = [ARCH_MAIN] * N_MAIN + [ARCH_ALT] * N_ALT
+    spec = FleetSpec(
+        replicas=tuple(
+            ReplicaSpec(name=f"r{i:03d}", arch=arch,
+                        clock=ClockSpec(mode="lock"),
+                        decode=PoolSpec(batch=BATCH),
+                        max_seq_len=MAX_SEQ_LEN,
+                        prefill_chunk_tokens=CHUNK_TOKENS)
+            for i, arch in enumerate(archs)),
+        router="rr",                # O(1) per arrival; JSQ would be O(N)
+    )
+    return Fleet.from_spec(spec, emodel=h200_model(), params_for=params_for())
+
+
+def aligned_trace(n_requests: int, *, t0: float = 0.0):
+    """Waves of one identical prompt per replica at one-step cadence —
+    every fused path (admission + decode) at full coverage. The prompt
+    array is SHARED across requests: a million-request trace must not
+    hold a million numpy buffers. Partial waves are dropped; callers
+    surface the count (see serve_events.wave_trace)."""
+    rng = np.random.default_rng(TRACE_SEED)
+    prompt = rng.integers(1, 100, PROMPT_LEN).astype(np.int32)
+    n_waves = n_requests // N_REPLICAS
+    trace = [
+        TracedRequest(arrival_s=t0 + w * WAVE_DT_S, prompt=prompt,
+                      max_new_tokens=MAX_NEW, bucket="mixed")
+        for w in range(n_waves) for _ in range(N_REPLICAS)
+    ]
+    return trace, n_requests - len(trace)
+
+
+def drifted_trace(n_requests: int, *, t0: float = 0.0):
+    """Mixed prompt lengths + jittered arrivals: replica clocks drift off
+    exact ties, so only the fusion quantum and pow2 group bucketing keep
+    dispatches shared. Prompts come from a small shared pool of arrays."""
+    rng = np.random.default_rng(TRACE_SEED + 1)
+    pool = [rng.integers(1, 100, int(n)).astype(np.int32)
+            for n in rng.integers(8, 25, 32)]
+    trace = []
+    for i in range(n_requests):
+        jitter = float(rng.uniform(0.0, 0.3 * WAVE_DT_S))
+        trace.append(TracedRequest(
+            arrival_s=t0 + (i // N_REPLICAS) * WAVE_DT_S + jitter,
+            prompt=pool[int(rng.integers(0, len(pool)))],
+            max_new_tokens=MAX_NEW, bucket="mixed"))
+    return trace
+
+
+def scale_trace(n_requests: int):
+    """Aligned phase then drifted phase, half each."""
+    n_aligned = n_requests // 2
+    a, dropped = aligned_trace(n_aligned)
+    t0 = (len(a) // N_REPLICAS + 2) * WAVE_DT_S if a else 0.0
+    d = drifted_trace(n_requests - len(a), t0=t0)
+    return a + d, dropped
+
+
+class StreamHash:
+    """Streaming replay fingerprint + latency accumulator: hashes every
+    finished request in completion order and releases it back to the
+    request freelist, so the replay holds O(in-flight) requests."""
+
+    def __init__(self):
+        self._h = hashlib.sha256()
+        self.completed = 0
+        self.ttft = []
+        self.e2e = []
+
+    def __call__(self, req):
+        led = req.ledger
+        self._h.update(json.dumps(
+            [req.replica, req.uid, req.output, led.arrival_s,
+             led.admitted_s, led.first_token_s, led.finish_s]).encode())
+        self.completed += 1
+        self.ttft.append(led.first_token_s - led.arrival_s)
+        self.e2e.append(led.finish_s - led.arrival_s)
+        release_request(req)
+
+    def digest(self, fleet) -> str:
+        self._h.update(json.dumps(fleet.measured_energy_j(),
+                                  sort_keys=True).encode())
+        return self._h.hexdigest()
+
+
+def replay(trace, **engine_opts):
+    """One streamed replay; returns (metrics, sha256, wall_s)."""
+    fleet = make_fleet()
+    stream = StreamHash()
+    opts = {"on_finish": stream, **engine_opts}
+    t0 = time.perf_counter()
+    fleet.run_trace(trace, max_steps=1_000_000_000, engine_opts=opts)
+    wall_s = time.perf_counter() - t0
+    st = fleet.last_engine_stats
+    ttft = np.asarray(stream.ttft)
+    metrics = {
+        "completed": stream.completed,
+        "requests": len(trace),
+        "replicas": N_REPLICAS,
+        "decode_steps": st.decode_steps,
+        "jit_dispatches": st.jit_dispatches,
+        "dispatches_per_request": st.jit_dispatches / max(len(trace), 1),
+        "fused_decode_coverage": st.fused_decode_coverage,
+        "fused_prefill_coverage": st.fused_prefill_coverage,
+        "peak_heap": st.peak_heap,
+        "events": st.events,
+        "total_j": fleet.total_energy_j(),
+        "p50_ttft_s": float(np.percentile(ttft, 50)) if len(ttft) else None,
+        "p99_ttft_s": float(np.percentile(ttft, 99)) if len(ttft) else None,
+        "engine_stats": st.as_dict(),
+    }
+    return metrics, stream.digest(fleet), wall_s
+
+
+def run(smoke: bool = False, write_json: bool = False):
+    """Harness contract: yields (name, us_per_call, derived) rows; raises
+    on any violated completion/determinism/coverage/dispatch assertion."""
+    if smoke:
+        n_scale, n_aligned, n_compare = 4_000, 2_000, 1_000
+    else:
+        n_scale, n_aligned, n_compare = 1_000_000, 50_000, 10_000
+
+    out_rows = []
+    violations = []
+
+    # ---- the scale run: mixed trace, streamed, double replay -------------
+    trace, dropped = scale_trace(n_scale)
+    if dropped:
+        print(f"serve_scale: dropped {dropped} requests to whole waves",
+              file=sys.stderr)
+    first, sha_a, wall_a = replay(trace, fusion_quantum_s=QUANTUM_S)
+    again, sha_b, wall_b = replay(trace, fusion_quantum_s=QUANTUM_S)
+    out_rows.append((
+        "serve_scale/replay",
+        1e6 * wall_a / max(len(trace), 1),
+        f"requests={len(trace)};dropped={dropped};replicas={N_REPLICAS};"
+        f"dispatches_per_request={first['dispatches_per_request']:.3f};"
+        f"peak_heap={first['peak_heap']};total_j={first['total_j']:.1f};"
+        f"wall_s={wall_a:.1f}",
+    ))
+    if first["completed"] != len(trace):
+        violations.append(
+            f"scale: {first['completed']}/{len(trace)} completed")
+    identical = sha_a == sha_b and first == again
+    if not identical:
+        violations.append("scale replay NOT byte-identical across runs")
+    out_rows.append((
+        "serve_scale/determinism", 0.0,
+        f"byte_identical={identical};sha={sha_a[:16]}",
+    ))
+    if first["dispatches_per_request"] >= DISPATCH_CEILING:
+        violations.append(
+            f"{first['dispatches_per_request']:.3f} jit dispatches/request "
+            f"(ceiling {DISPATCH_CEILING})")
+
+    # ---- aligned phase: fused coverage ------------------------------------
+    atrace, _ = aligned_trace(n_aligned)
+    amet, _, _ = replay(atrace)
+    if amet["fused_decode_coverage"] < 0.80:
+        violations.append(
+            f"aligned fused decode coverage "
+            f"{100 * amet['fused_decode_coverage']:.1f}% < 80%")
+    out_rows.append((
+        "serve_scale/aligned_coverage", 0.0,
+        f"fused_decode_pct={100 * amet['fused_decode_coverage']:.1f};"
+        f"fused_prefill_pct={100 * amet['fused_prefill_coverage']:.1f}",
+    ))
+
+    # ---- dispatch count: full fusion vs the PR-6 dispatch pattern ---------
+    ctrace, _ = scale_trace(n_compare)
+    fused_m, fused_sha, _ = replay(ctrace, fusion_quantum_s=QUANTUM_S)
+    serial_m, _, _ = replay(ctrace, fuse_prefill=False)
+    if not fused_m["jit_dispatches"] < serial_m["jit_dispatches"]:
+        violations.append(
+            f"fusion did not reduce dispatches: "
+            f"{fused_m['jit_dispatches']} vs {serial_m['jit_dispatches']}")
+    out_rows.append((
+        "serve_scale/dispatches_vs_serial", 0.0,
+        f"fused={fused_m['jit_dispatches']};"
+        f"serial={serial_m['jit_dispatches']};"
+        f"saved_pct={100 * (1 - fused_m['jit_dispatches'] / max(serial_m['jit_dispatches'], 1)):.1f}",
+    ))
+
+    # ---- quantum semantics ------------------------------------------------
+    q0_m, q0_sha, _ = replay(ctrace, fusion_quantum_s=0.0)
+    exact_m, exact_sha, _ = replay(ctrace)
+    if q0_sha != exact_sha:
+        violations.append("quantum=0 NOT byte-identical to exact-tie engine")
+    if fused_sha != q0_sha:
+        # the quantum only regroups dispatches: outputs/stamps/joules are
+        # invariant, so even the positive-quantum replay matches
+        violations.append("positive quantum changed the replay fingerprint")
+    out_rows.append((
+        "serve_scale/quantum", 0.0,
+        f"q0_identical={q0_sha == exact_sha};"
+        f"q_invariant={fused_sha == q0_sha};quantum_s={QUANTUM_S}",
+    ))
+
+    # ---- wall budget ------------------------------------------------------
+    slowest = max(wall_a, wall_b)
+    if TIME_BUDGET_S > 0:
+        if slowest > TIME_BUDGET_S:
+            violations.append(
+                f"a replay took {slowest:.1f}s "
+                f"(> {TIME_BUDGET_S:.0f}s budget)")
+        out_rows.append((
+            "serve_scale/wall_time", 0.0,
+            f"slowest_replay_s={slowest:.1f};budget_s={TIME_BUDGET_S:.0f}",
+        ))
+
+    results = {"scale": first, "scale_sha": sha_a, "aligned": amet,
+               "dispatch": {"fused": fused_m["jit_dispatches"],
+                            "serial": serial_m["jit_dispatches"]},
+               "wall_s": [wall_a, wall_b]}
+    write_csv("serve_scale", ["metric", "value"],
+              [[k, v] for k, v in first.items() if k != "engine_stats"]
+              + [["aligned_fused_decode_coverage",
+                  amet["fused_decode_coverage"]],
+                 ["dispatch_fused", fused_m["jit_dispatches"]],
+                 ["dispatch_serial", serial_m["jit_dispatches"]]])
+    if write_json:
+        write_bench_json(
+            "serve_scale", results, smoke=smoke, path=JSON_PATH,
+            trace={"n": len(trace), "n_requested": n_scale,
+                   "dropped": dropped, "shape": "aligned+drifted",
+                   "wave_dt_s": WAVE_DT_S, "quantum_s": QUANTUM_S,
+                   "prompt_len": PROMPT_LEN, "max_new": MAX_NEW,
+                   "seed": TRACE_SEED},
+        )
+        out_rows.append(("serve_scale/json", 0.0, f"wrote={JSON_PATH}"))
+    if violations:
+        raise RuntimeError("; ".join(violations))
+    return out_rows
+
+
+def main():
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    write_json = "--json" in argv
+    ok = True
+    try:
+        for name, us, derived in run(smoke=smoke, write_json=write_json):
+            print(f"{name},{us:.1f},{derived}")
+    except RuntimeError as e:
+        print(f"serve_scale checks VIOLATED: {e}")
+        ok = False
+    print("serve_scale checks:", "OK" if ok else "VIOLATED")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -23,9 +23,13 @@ from typing import Iterable, List, Optional, Sequence
 import numpy as np
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class LatencyLedger:
-    """Event timestamps (seconds on the serving clock) for one request."""
+    """Event timestamps (seconds on the serving clock) for one request.
+
+    ``slots=True``: a ledger is built per request and the event engine
+    replays millions of them — slots cut per-instance memory and attribute
+    lookups on the stamping hot path."""
 
     arrival_s: Optional[float] = None      # entered the waiting queue
     admitted_s: Optional[float] = None     # popped by the scheduler (prefill start)
@@ -58,6 +62,14 @@ class LatencyLedger:
         self.first_token_s = None
         self.finish_s = None
         self.token_s = []
+
+    def reset(self):
+        """Clear EVERY stamp (arrival included) — the request-freelist path
+        (``repro.serving.pool.release_request``) recycles ledgers wholesale,
+        unlike ``reset_service`` which preserves the arrival across a
+        preemption."""
+        self.arrival_s = None
+        self.reset_service()
 
     # ------------------------------------------------------------- derived
     @property

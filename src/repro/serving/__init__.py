@@ -17,7 +17,7 @@ from repro.serving.autoscaler import (
 from repro.serving.cluster import Cluster
 from repro.serving.controller import ClockController, Transition
 from repro.serving.engine import EOS, PhaseStats, Request, ServingEngine
-from repro.serving.events import EventDrivenFleet
+from repro.serving.events import EngineStats, EventDrivenFleet
 from repro.serving.fleet import Fleet, Replica, Scheduler
 from repro.serving.paged_cache import NULL_PAGE, BlockAllocator, TrafficCounter
 from repro.serving.pool import Pool
@@ -26,6 +26,7 @@ from repro.serving.router import (
     ArchAffinity,
     EnergyAware,
     JoinShortestQueue,
+    RoundRobin,
     Router,
     make_router,
 )
@@ -49,6 +50,7 @@ __all__ = [
     "Replica",
     "Fleet",
     "EventDrivenFleet",
+    "EngineStats",
     "ClockController",
     "Transition",
     "BlockAllocator",
@@ -72,6 +74,7 @@ __all__ = [
     "Router",
     "ROUTERS",
     "JoinShortestQueue",
+    "RoundRobin",
     "EnergyAware",
     "ArchAffinity",
     "make_router",

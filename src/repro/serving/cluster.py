@@ -43,7 +43,7 @@ barrier driver (``engine="barrier"``).
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, Iterable, List, Optional
+from typing import Any, Callable, Deque, Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -139,7 +139,7 @@ class Cluster:
         return self._replica.virtual
 
     @property
-    def waiting(self) -> List[Request]:
+    def waiting(self) -> "Deque[Request]":
         return self._replica.waiting
 
     # ------------------------------------------------------------------ api
@@ -177,14 +177,17 @@ class Cluster:
         *,
         max_steps: int = 1000000,
         engine: str = "events",
+        engine_opts: Optional[Dict[str, Any]] = None,
     ) -> List[Request]:
         """Replay an arrival trace on the one replica — subsumed by (and
         delegated to) ``Fleet.run_trace``. ``engine`` picks the driver
         (``"events"`` or ``"barrier"``); with the cluster's single shared
         clock the two produce identical token streams and modelled
-        joules, so the facade's behaviour is unchanged either way."""
+        joules, so the facade's behaviour is unchanged either way.
+        ``engine_opts`` forward to the event engine (fusion quantum,
+        fused-prefill toggle, streaming ``on_finish``)."""
         return self._fleet.run_trace(trace, max_steps=max_steps,
-                                     engine=engine)
+                                     engine=engine, engine_opts=engine_opts)
 
     def run_to_completion(self, max_steps: int = 100000) -> List[Request]:
         return self._replica.run_to_completion(max_steps=max_steps)

@@ -16,7 +16,8 @@ recipe (§7.1). The public API — ``submit`` / ``step`` /
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, List, Optional
+from collections import deque
+from typing import Any, Callable, Deque, List, Optional
 
 import numpy as np
 
@@ -29,6 +30,8 @@ from repro.serving.pool import (
     Request,
     head_validator,
     observe_latencies,
+    popleft,
+    requeue_front,
 )
 from repro.serving.spec import ReplicaSpec
 
@@ -63,7 +66,7 @@ class ServingEngine:
             paged=paged, kv_block_size=kv_block_size, kv_blocks=kv_blocks,
         )
         self.controller = controller
-        self.waiting: List[Request] = []
+        self.waiting: Deque[Request] = deque()
         self._uid = 0
         self._step_no = 0
 
@@ -138,7 +141,7 @@ class ServingEngine:
         admitted: List[Request] = []
         while self.waiting and self.pool.can_admit(self.waiting[0]):
             req = validated_head()
-            self.waiting.pop(0)
+            popleft(self.waiting)
             first, cache1 = self.pool.prefill_request(req)
             self.pool.place(req, cache1, first, len(req.prompt))
             admitted.append(req)
@@ -156,9 +159,7 @@ class ServingEngine:
         finished = self.pool.decode_once()
         if self.controller is not None:
             observe_latencies(self.controller, self.pool, admitted, finished)
-        evicted = self.pool.take_evicted()
-        if evicted:
-            self.waiting[:0] = evicted
+        requeue_front(self.waiting, self.pool.take_evicted())
         return finished
 
     def run_to_completion(self, max_steps: int = 100000) -> List[Request]:

@@ -22,10 +22,47 @@ their OWN dependencies are ready. Consequences:
   tuple of per-pool argument tuples (each pool still splits its own RNG
   key and keeps its own accounting, so token streams are independent of
   grouping); at K aligned replicas this saves K-1 jit dispatches per step.
+* **Fused admission prefill.** Admission (ADMIT) events that pop at the
+  same instant batch the same way: every admission decided across the
+  drained events defers its ``_jit_prefill`` dispatch, the engine groups
+  the deferred prefills by (config, params, prompt bucket) and runs each
+  group as ONE jitted program of K independent batch-1 prefills, then
+  replays the per-request accounting (clock advance, gauge bracketing,
+  ledger stamps, RNG order, modelled joules) request-by-request in the
+  exact order the serial path would have — byte-identical outputs, 1/K the
+  dispatches. ``fuse_prefill=False`` restores the serial dispatch path
+  (and is the byte-identity baseline the tests compare against).
+* **Fusion quantum.** Exact-time fusion keys on ``t + _EPS`` ties, so a
+  heterogeneous fleet whose clocks drift by one step defuses permanently.
+  ``fusion_quantum_s=q`` widens the window: consecutive decode events at
+  the TOP of the heap inside ``[t, t+q)`` drain into one dispatch batch.
+  Timestamp semantics are unchanged — each pool still advances its own
+  clock by its own modelled step time, only the dispatch is shared — and
+  the window never crosses a non-decode event (an arrival or admission
+  inside the window still orders before the later decode steps), so token
+  streams are invariant under any quantum (property-tested). The default
+  ``q=0`` is byte-identical to the exact-tie engine.
 
 Event ordering at equal times is fixed by kind priority (warm-up
 completions < arrivals < admissions < decode steps < autoscaler timers)
 then by insertion sequence — the replay is a pure function of the trace.
+
+Scale plumbing (the 10^6-requests / 100-replica path):
+
+* Arrivals enter the heap LAZILY — one trace arrival is in flight at a
+  time, so the heap stays O(replicas), not O(trace).
+* Fused-dispatch group sizes bucket to powers of two (padded with inert
+  repeats of the group's first member, results discarded), so the jit
+  trace count on a drifting fleet stays O(log fleet) instead of one trace
+  per distinct group size; the trace cache is a capped LRU, and the
+  underlying jit programs are shared process-wide (like the per-pool
+  ``_JIT_CACHE``), so fresh engines over the same fleet shape replay
+  without recompiling.
+* ``on_finish`` streams finished requests to a callback instead of
+  accumulating them — with ``repro.serving.pool.release_request`` the
+  replay runs memory-flat.
+* ``EngineStats`` counts events, dispatches, fusion coverage and heap
+  depth; ``Fleet.last_engine_stats`` hands it to benchmarks.
 
 Semantics notes (parity with the barrier driver where timelines coincide):
 
@@ -44,17 +81,21 @@ Semantics notes (parity with the barrier driver where timelines coincide):
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
-from typing import Any, Dict, List, Optional, Set, Tuple, TYPE_CHECKING
+from collections import OrderedDict
+from typing import (
+    Any, Callable, Deque, Dict, List, Optional, Set, Tuple, TYPE_CHECKING,
+)
 
 import jax
 
-from repro.serving.pool import Pool, Request, observe_latencies
+from repro.serving.pool import Pool, Request, observe_latencies, requeue_front
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.serving.fleet import Fleet, Replica
 
-__all__ = ["EventDrivenFleet"]
+__all__ = ["EngineStats", "EventDrivenFleet"]
 
 # pop order at equal virtual time: a warm-up that ends exactly when a
 # request arrives must admit it; an admission decided at t feeds the decode
@@ -63,21 +104,114 @@ PRIO_WARM, PRIO_ARRIVAL, PRIO_ADMIT, PRIO_DECODE, PRIO_SCALE = range(5)
 
 _EPS = 1e-12
 
+# Process-wide fused jit programs, keyed on what the TRACE depends on (the
+# underlying per-pool impl — itself shared via ``pool._JIT_CACHE`` — plus
+# any static trace constants). The per-engine ``_fused_cache`` keeps its
+# capped-LRU (kind, sig, pow2) bookkeeping, but cache misses resolve here
+# first, so a benchmark that replays the same fleet shape through several
+# fresh engines compiles each fused program once per process, not once per
+# engine.
+_PROGRAM_CACHE: Dict[Tuple[Any, ...], Any] = {}
+
+
+def _program(key: Tuple[Any, ...], make: Callable[[], Any]):
+    fn = _PROGRAM_CACHE.get(key)
+    if fn is None:
+        fn = _PROGRAM_CACHE[key] = make()
+    return fn
+
+
+@dataclasses.dataclass(slots=True)
+class EngineStats:
+    """Counter block for one event-engine replay — the observability the
+    scale work needs to see where the next bottleneck moves. Written into
+    every serving benchmark's JSON artifact via ``as_dict``."""
+
+    events: int = 0                    # heap pops, every kind
+    events_by_kind: Dict[str, int] = dataclasses.field(default_factory=dict)
+    peak_heap: int = 0                 # max heap length observed
+    decode_steps: int = 0              # per-pool decode steps executed
+    placements: int = 0                # cache rows placed into decode slots
+    prefills: int = 0                  # admission prefills run
+    fused_prefill_calls: int = 0       # batched prefill jit dispatches
+    serial_prefill_calls: int = 0      # one-request prefill jit dispatches
+    fused_prefill_reqs: int = 0        # prefills served by fused dispatches
+    fused_decode_calls: int = 0        # multi-pool decode jit dispatches
+    serial_decode_calls: int = 0       # one-pool decode jit dispatches
+    fused_traces: int = 0              # fused jit programs built (LRU inserts)
+    pad_waste: int = 0                 # inert pad slots across fused calls
+    pool_jit_dispatches: int = 0       # serial dispatches made by the pools
+                                       # (prefill + scatter + serial decode)
+
+    @property
+    def jit_dispatches(self) -> int:
+        """Total XLA dispatches this replay paid (fused + serial)."""
+        return (self.pool_jit_dispatches + self.fused_decode_calls
+                + self.fused_prefill_calls)
+
+    @property
+    def fused_prefill_coverage(self) -> float:
+        """Fraction of admission prefills served by a fused dispatch."""
+        return self.fused_prefill_reqs / self.prefills if self.prefills else 0.0
+
+    @property
+    def fused_decode_coverage(self) -> float:
+        """Fraction of pool decode steps served by a fused dispatch."""
+        if not self.decode_steps:
+            return 0.0
+        return (self.decode_steps - self.serial_decode_calls) / self.decode_steps
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["jit_dispatches"] = self.jit_dispatches
+        d["fused_prefill_coverage"] = self.fused_prefill_coverage
+        d["fused_decode_coverage"] = self.fused_decode_coverage
+        return d
+
 
 class EventDrivenFleet:
-    """One trace replay, event-driven. Build per ``run_trace`` call."""
+    """One trace replay, event-driven. Build per ``run_trace`` call.
 
-    def __init__(self, fleet: "Fleet", *, fast_path_min: int = 4):
+    ``fusion_quantum_s`` widens decode-dispatch fusion from exact virtual-
+    time ties to the half-open window ``[t, t+q)`` (see module docstring);
+    0 is byte-identical to the exact-tie engine. ``fuse_prefill`` toggles
+    the batched admission-prefill path (True by default; False is the
+    serial PR-6 dispatch behaviour and the byte-identity baseline).
+    ``max_fused_group`` caps how many per-pool bodies one fused program
+    traces (rounded up to a power of two; larger batches chunk).
+    ``on_finish`` streams each finished request to the callback INSTEAD of
+    accumulating it in the returned list — the memory-flat path for
+    million-request replays (pair with ``pool.release_request``)."""
+
+    def __init__(self, fleet: "Fleet", *, fast_path_min: int = 4,
+                 fusion_quantum_s: float = 0.0,
+                 fuse_prefill: bool = True,
+                 max_fused_group: int = 64,
+                 fused_cache_cap: int = 64,
+                 on_finish: Optional[Callable[[Request], None]] = None):
         if not fleet.virtual:
             raise ValueError("the event engine needs VirtualClock replicas")
+        if fusion_quantum_s < 0:
+            raise ValueError("fusion_quantum_s must be >= 0")
+        if max_fused_group < 1:
+            raise ValueError("max_fused_group must be >= 1")
         self.fleet = fleet
         self.fast_path_min = max(2, int(fast_path_min))
+        self.fusion_quantum_s = float(fusion_quantum_s)
+        self.fuse_prefill = bool(fuse_prefill)
+        # pow2 so chunk sizes bucket onto themselves
+        self.max_fused_group = 1 << (int(max_fused_group) - 1).bit_length()
+        self.fused_cache_cap = max(4, int(fused_cache_cap))
+        self.on_finish = on_finish
+        self.stats = EngineStats()
         self._heap: List[Tuple[float, int, int, str, Any]] = []
         self._seq = 0
         self._real = 0                     # outstanding non-timer events
-        # per replica: prefilled-but-not-placed rows (ready_s, req, cache1,
-        # first_token) in admission order
-        self._pending: Dict[str, List[Tuple[float, Request, Any, int]]] = {
+        # per replica: prefilled-but-not-placed rows as MUTABLE entries
+        # [ready_s, req, cache1, first] in admission order (the fused
+        # admission path appends placeholders during the scheduler tick and
+        # fills them after the batched dispatch)
+        self._pending: Dict[str, List[List[Any]]] = {
             r.name: [] for r in fleet.replicas}
         # per replica: virtual time of the scheduled decode event, or None
         self._decode_at: Dict[str, Optional[float]] = {
@@ -91,14 +225,23 @@ class EventDrivenFleet:
         self._admit_sched: Dict[str, int] = {r.name: 0 for r in fleet.replicas}
         self._warm_sched: Set[Tuple[str, float]] = set()
         self._scale_pending: Set[float] = set()
-        self._fused_cache: Dict[Tuple[Any, ...], Any] = {}
-        self.fused_calls = 0               # jitted multi-pool dispatches
+        # capped LRU of fused jit programs, keyed (kind, sig, pow2 size)
+        self._fused_cache: "OrderedDict[Tuple[Any, ...], Any]" = OrderedDict()
         self._steps = 0
+        # lazy arrival feed: one trace arrival in the heap at a time
+        self._trace: List[Any] = []
+        self._next_arrival = 0
         self._tick_interval = 0.0
         if fleet.autoscaler is not None:
             self._tick_interval = float(getattr(
                 getattr(fleet.autoscaler, "spec", None),
                 "tick_interval_s", 0.0) or 0.0)
+
+    # --------------------------------------------------------------- back-compat
+    @property
+    def fused_calls(self) -> int:
+        """Fused decode dispatches (the PR-6 counter name)."""
+        return self.stats.fused_decode_calls
 
     # ----------------------------------------------------------- heap basics
     def _push(self, t: float, prio: int, kind: str, payload: Any):
@@ -106,16 +249,51 @@ class EventDrivenFleet:
         self._seq += 1
         if prio != PRIO_SCALE:
             self._real += 1
+        if len(self._heap) > self.stats.peak_heap:
+            self.stats.peak_heap = len(self._heap)
 
     def _pop(self):
         ev = heapq.heappop(self._heap)
         if ev[1] != PRIO_SCALE:
             self._real -= 1
+        st = self.stats
+        st.events += 1
+        kind = ev[3]
+        st.events_by_kind[kind] = st.events_by_kind.get(kind, 0) + 1
         return ev
 
     def _push_admit(self, name: str, t: float, accrue: bool):
         self._admit_sched[name] += 1
         self._push(t, PRIO_ADMIT, "admit", (name, accrue))
+
+    def _push_next_arrival(self):
+        """Feed the next trace arrival into the heap. Arrivals are sorted,
+        so holding exactly one keeps the heap O(replicas) deep at 10^6
+        requests while popping in the same order an eager fill would (heap
+        ties only compare the insertion sequence WITHIN one (t, priority)
+        class, and only one trace arrival is ever in flight)."""
+        i = self._next_arrival
+        if i < len(self._trace):
+            self._next_arrival = i + 1
+            self._push(self._t_start + self._trace[i].arrival_s,
+                       PRIO_ARRIVAL, "arrival", i)
+
+    def _fused_fn(self, key: Tuple[Any, ...], build: Callable[[], Any]):
+        """Capped-LRU lookup of a fused jit program."""
+        cache = self._fused_cache
+        fn = cache.get(key)
+        if fn is None:
+            fn = cache[key] = build()
+            self.stats.fused_traces += 1
+            while len(cache) > self.fused_cache_cap:
+                cache.popitem(last=False)
+        else:
+            cache.move_to_end(key)
+        return fn
+
+    @staticmethod
+    def _pow2(n: int) -> int:
+        return 1 << (n - 1).bit_length()
 
     # ------------------------------------------------------------ clock utils
     @staticmethod
@@ -129,10 +307,11 @@ class EventDrivenFleet:
     # ------------------------------------------------------------------- run
     def run(self, trace, *, max_steps: int = 1000000) -> List[Request]:
         fleet = self.fleet
-        pending_trace = sorted(trace, key=lambda t: t.arrival_s)
-        t_start = fleet.now_s()
-        for i, tr in enumerate(pending_trace):
-            self._push(t_start + tr.arrival_s, PRIO_ARRIVAL, "arrival", i)
+        self._trace = sorted(trace, key=lambda t: t.arrival_s)
+        self._t_start = t_start = fleet.now_s()
+        base_dispatch = sum(p.jit_dispatches for r in fleet.replicas
+                            for p in (r.prefill_pool, r.decode_pool))
+        self._push_next_arrival()
         for r in fleet.replicas:
             if r.powered and r._warming_until_s is not None:
                 self._schedule_warm(r)
@@ -144,26 +323,78 @@ class EventDrivenFleet:
         if fleet.autoscaler is not None and self._tick_interval > 0:
             self._push(t_start + self._tick_interval, PRIO_SCALE, "scale", None)
         done: List[Request] = []
+        quantum = self.fusion_quantum_s
         fleet.start_metering()
         try:
             while self._heap and self._steps < max_steps:
                 t, prio, _, kind, payload = self._pop()
                 if kind == "decode":
+                    # batch decode events at the SAME instant — and, with a
+                    # fusion quantum, every decode event at the top of the
+                    # heap inside [t, t+q). A replica's decode event is
+                    # always preceded by its own post-step ADMIT event at
+                    # the same stamp, so the window also processes ADMIT
+                    # events inside it for replicas NOT already drained
+                    # (disjoint per-replica state: the reorder against an
+                    # earlier replica's decode step is unobservable). Only
+                    # dispatch grouping changes — each pool still steps at
+                    # its own scheduled time on its own clock; arrivals,
+                    # warm-ups, autoscaler events, or a repeat replica
+                    # terminate the window, so routing and same-replica
+                    # sequencing keep the exact-tie order
                     names = [payload]
-                    # batch every decode event at the SAME instant: the
-                    # fused fast path runs homogeneous ones in one jit call
-                    while (self._heap and self._heap[0][1] == PRIO_DECODE
-                           and self._heap[0][0] <= t + _EPS):
-                        names.append(self._pop()[4])
-                    done.extend(self._decode_batch(names, t))
+                    seen = {payload}
+                    win = t + quantum
+                    while self._heap:
+                        t0, p0 = self._heap[0][0], self._heap[0][1]
+                        if (p0 == PRIO_DECODE
+                                and (t0 <= t + _EPS or t0 < win)
+                                and self._heap[0][4] not in seen):
+                            names.append(self._pop()[4])
+                            seen.add(names[-1])
+                        elif (quantum > 0.0 and p0 == PRIO_ADMIT
+                              and t0 < win
+                              and self._heap[0][4][0] not in seen):
+                            ev = self._pop()
+                            name, accrue = ev[4]
+                            self._admit_sched[name] -= 1
+                            r = fleet.by_name[name]
+                            self._admit(r, ev[0], accrue=accrue)
+                            self._after_admit(r)
+                        else:
+                            break
+                    finished = self._decode_batch(names, t)
+                    if self.on_finish is not None:
+                        for q in finished:
+                            self.on_finish(q)
+                    else:
+                        done.extend(finished)
                 elif kind == "arrival":
-                    self._handle_arrival(pending_trace[payload], t)
+                    self._push_next_arrival()
+                    self._handle_arrival(self._trace[payload], t)
                 elif kind == "admit":
-                    name, accrue = payload
-                    self._admit_sched[name] -= 1
-                    r = fleet.by_name[name]
-                    self._admit(r, t, accrue=accrue)
-                    self._after_admit(r)
+                    if not self.fuse_prefill:
+                        name, accrue = payload
+                        self._admit_sched[name] -= 1
+                        r = fleet.by_name[name]
+                        self._admit(r, t, accrue=accrue)
+                        self._after_admit(r)
+                    else:
+                        # drain same-instant admission events for DISTINCT
+                        # replicas: their scheduler ticks are independent,
+                        # so the decided prefills can share one dispatch.
+                        # A repeat of a replica ends the drain — its second
+                        # tick depends on the first's placements
+                        batch = [payload]
+                        seen = {payload[0]}
+                        while (self._heap
+                               and self._heap[0][1] == PRIO_ADMIT
+                               and self._heap[0][0] <= t + _EPS
+                               and self._heap[0][4][0] not in seen):
+                            ev = self._pop()
+                            batch.append(ev[4])
+                            seen.add(ev[4][0])
+                        self._admit_batch(batch, t)
                 elif kind == "warm":
                     self._handle_warm(fleet.by_name[payload], t)
                 elif kind == "scale":       # the autoscaler's periodic timer
@@ -178,6 +409,12 @@ class EventDrivenFleet:
             for r in fleet.replicas:
                 r.advance_all(t_end)
             fleet.stop_metering()
+            st = self.stats
+            st.decode_steps = self._steps
+            st.pool_jit_dispatches = sum(
+                p.jit_dispatches for r in fleet.replicas
+                for p in (r.prefill_pool, r.decode_pool)) - base_dispatch
+            fleet.last_engine_stats = st
         return done
 
     # --------------------------------------------------------------- arrivals
@@ -208,22 +445,32 @@ class EventDrivenFleet:
             self._after_admit(r)
 
     # -------------------------------------------------------------- admission
-    def _admit(self, r: "Replica", t: float, *, accrue: bool):
+    def _admit_tick(self, r: "Replica", t: float, *, accrue: bool,
+                    collect: Optional[List[Tuple[Pool, Request, List[Any]]]] = None):
         """One scheduler tick at event time ``t`` on the replica's prefill
         timeline. Prefilled rows become pending placements; the decode
-        timeline picks them up in ``_flush``."""
+        timeline picks them up in ``_flush``.
+
+        With ``collect`` given, the admission prefill DISPATCH is deferred:
+        each admitted request appends a mutable placeholder to the pending
+        list (the gate closure only reads entry count + prompt lengths, so
+        capacity accounting is exact) and a job onto ``collect``; the
+        caller runs the batched dispatch and then fills every placeholder
+        through ``Pool.prefill_request(precomputed=...)`` in admission
+        order — the per-pool clock/gauge/RNG/stamp sequence is untouched."""
         if not r.powered or (r._warming_until_s is not None
                              and t < r._warming_until_s - _EPS):
-            return
+            return None
         pp, dp = r.prefill_pool, r.decode_pool
         self._catch_up(pp, t)
         if not r.waiting:
             r.scheduler.tick(r.waiting, pp, dp)     # credit reset, empty queue
-            return
+            return None
         if r.controller is not None:
             r._step_no += 1
             r.controller.tick(r.pools(), r._step_no)
         pend = self._pending[r.name]
+        st = self.stats
 
         def gate(req: Request) -> bool:
             # can_admit, minus capacity already promised to pending rows
@@ -236,40 +483,175 @@ class EventDrivenFleet:
                 return dp.allocator.can_alloc(need + held)
             return True
 
-        def admit(req: Request) -> None:
-            first, cache1 = pp.prefill_request(req)
-            pend.append((pp.clock.now_s, req, cache1, first))
+        if collect is None:
+            def admit(req: Request) -> None:
+                first, cache1 = pp.prefill_request(req)
+                pend.append([pp.clock.now_s, req, cache1, first])
+                st.prefills += 1
+                st.serial_prefill_calls += 1
+        else:
+            def admit(req: Request) -> None:
+                entry: List[Any] = [None, req, None, None]
+                pend.append(entry)
+                collect.append((pp, req, entry))
 
         admitted = r.scheduler.tick(r.waiting, pp, dp,
                                     admit=admit, gate=gate, accrue=accrue)
-        for req in admitted:
+        return {"admitted": admitted, "gate": gate}
+
+    def _admit_finish(self, r: "Replica", info: Optional[Dict[str, Any]]):
+        """The post-tick half of an admission: log the tick's admissions
+        (their ledgers are stamped by now even on the fused path) and spin
+        a zero-duration admission event for a long queue head."""
+        if info is None:
+            return
+        for req in info["admitted"]:
             r.admit_log.append((req.ledger.admitted_s, req.ledger.queue_s))
-        if (r.waiting and not admitted and not pend
+        pend = self._pending[r.name]
+        if (r.waiting and not info["admitted"] and not pend
                 and self._decode_at[r.name] is None
                 and self._admit_sched[r.name] == 0
-                and dp.occupancy() == 0 and gate(r.waiting[0])
+                and r.decode_pool.occupancy() == 0
+                and info["gate"](r.waiting[0])
                 and len(r.waiting[0].prompt) > r.scheduler._credit):
             # idle replica, long head: spin zero-duration admission events
             # until accrued credit covers the prompt — the barrier's
             # frozen-clock rounds, bounded at ceil(prompt/chunk) spins
-            self._push_admit(r.name, pp.clock.now_s, True)
+            self._push_admit(r.name, r.prefill_pool.clock.now_s, True)
+
+    def _admit(self, r: "Replica", t: float, *, accrue: bool):
+        """Single-replica admission (arrival-path / warm-path / single
+        ADMIT event). With ``fuse_prefill`` on, a tick that admits K
+        requests still runs ONE grouped dispatch; with it off, every
+        prefill dispatches inline inside the scheduler tick (the serial
+        baseline)."""
+        if not self.fuse_prefill:
+            self._admit_finish(r, self._admit_tick(r, t, accrue=accrue))
+            return
+        jobs: List[Tuple[Pool, Request, List[Any]]] = []
+        info = self._admit_tick(r, t, accrue=accrue, collect=jobs)
+        if jobs:
+            self._prefill_fused(jobs)
+        self._admit_finish(r, info)
+
+    def _admit_batch(self, batch: List[Tuple[str, bool]], t: float):
+        """Process a drained batch of same-instant admission events for
+        distinct replicas: collect every decided admission with its prefill
+        dispatch deferred, run the grouped dispatches, then finish each
+        replica in event order. Equivalent to processing the events
+        serially because the ticks touch disjoint replica state, the
+        deferred accounting replays in admission order, and every heap push
+        (spin admits, decode events) happens in the finish phase in the
+        same per-replica order the serial engine uses."""
+        fleet = self.fleet
+        jobs: List[Tuple[Pool, Request, List[Any]]] = []
+        infos: List[Tuple["Replica", Optional[Dict[str, Any]]]] = []
+        for name, accrue in batch:
+            self._admit_sched[name] -= 1
+            r = fleet.by_name[name]
+            infos.append((r, self._admit_tick(r, t, accrue=accrue,
+                                              collect=jobs)))
+        if jobs:
+            self._prefill_fused(jobs)
+        for r, info in infos:
+            self._admit_finish(r, info)
+            self._after_admit(r)
+
+    def _prefill_fused(self, jobs: List[Tuple[Pool, Request, List[Any]]]):
+        """Run every deferred admission prefill in grouped jitted dispatches
+        and fill the pending-placement placeholders. Grouping is by
+        (config, params, max_seq_len, prompt bucket); group sizes chunk at
+        ``max_fused_group`` and pad to powers of two with an inert repeat
+        of the group's first prompt (results discarded), so the program
+        cache stays O(log fleet) on drifting group sizes. The per-request
+        accounting replays afterwards IN JOB ORDER — each pool sees its
+        admissions in exactly the serial sequence."""
+        st = self.stats
+        groups: Dict[Tuple[Any, ...], List[Tuple[Pool, Any, Any, int, List[Any]]]] = {}
+        order: List[Tuple[Any, ...]] = []
+        for pp, req, entry in jobs:
+            toks, true_len, bucket = pp.prefill_tokens(req)
+            sig = (pp.cfg, id(pp.params), pp.max_seq_len, bucket)
+            g = groups.get(sig)
+            if g is None:
+                g = groups[sig] = []
+                order.append(sig)
+            g.append((pp, toks, true_len, bucket, entry))
+        results: Dict[int, Tuple[Any, Any]] = {}
+        for sig in order:
+            items = groups[sig]
+            for i in range(0, len(items), self.max_fused_group):
+                self._prefill_fused_chunk(sig, items[i:i + self.max_fused_group],
+                                          results)
+        for pp, req, entry in jobs:
+            first, cache1 = pp.prefill_request(
+                req, precomputed=results[id(entry)])
+            entry[0] = pp.clock.now_s
+            entry[2] = cache1
+            entry[3] = first
+            st.prefills += 1
+            st.fused_prefill_reqs += 1
+
+    def _prefill_fused_chunk(self, sig, items, results: Dict[int, Any]):
+        """One fused prefill dispatch: K (pow2-padded) independent batch-1
+        bucketed prefills traced into one program. Identical per-request
+        computations to the serial ``_jit_prefill`` calls — only the
+        dispatch is shared (the same argument the fused decode path
+        already proves byte-exactly)."""
+        st = self.stats
+        k = len(items)
+        p = self._pow2(k)
+        pp0, toks0, len0, bucket, _ = items[0]
+        toks = [it[1] for it in items] + [toks0] * (p - k)
+        lens = [it[2] for it in items] + [len0] * (p - k)
+
+        def build():
+            impl = pp0._prefill_impl
+
+            def make():
+                def fused(params, toks, lens):
+                    return tuple(impl(params, tk, ln, bucket)
+                                 for tk, ln in zip(toks, lens))
+
+                return jax.jit(fused)
+
+            return _program(("prefill", impl, bucket), make)
+
+        fn = self._fused_fn(("prefill", sig, p), build)
+        outs = fn(pp0.params, tuple(toks), tuple(lens))
+        st.fused_prefill_calls += 1
+        st.pad_waste += p - k
+        for it, out in zip(items, outs):
+            results[id(it[4])] = out
 
     def _flush(self, r: "Replica"):
         """Place pending prefilled rows whose handoff time the decode
-        timeline has reached; an IDLE decode pool jumps forward to the
-        handoff instead (sampling its gauge across the wait)."""
+        timeline has reached — every consecutively-ready row in ONE
+        ``place_many`` scatter dispatch; an IDLE decode pool jumps forward
+        to the earliest handoff instead (sampling its gauge across the
+        wait)."""
         pend = self._pending[r.name]
         dp = r.decode_pool
         while pend:
-            ready, req, cache1, first = pend[0]
-            if ready > dp.clock.now_s + _EPS:
-                if dp.occupancy() > 0 or self._decode_at[r.name] is not None:
-                    break                   # joins a later step
-                self._catch_up(dp, ready)
-            pend.pop(0)
-            dp.place(req, cache1, first, len(req.prompt),
-                     first_token_s=ready)
-            self._obs[r.name].append(req)
+            batch = []
+            while pend:
+                ready, req, cache1, first = pend[0]
+                if ready is None or ready > dp.clock.now_s + _EPS:
+                    break
+                pend.pop(0)
+                batch.append((req, cache1, first, len(req.prompt), ready))
+            if batch:
+                dp.place_many(batch)
+                obs = self._obs[r.name]
+                for item in batch:
+                    obs.append(item[0])
+                self.stats.placements += len(batch)
+                continue                    # occupancy changed: re-evaluate
+            ready = pend[0][0]
+            if (ready is None or dp.occupancy() > 0
+                    or self._decode_at[r.name] is not None):
+                break                       # joins a later step
+            self._catch_up(dp, ready)
 
     def _ensure_decode(self, r: "Replica"):
         """Schedule the replica's next decode event: now for live slots,
@@ -311,9 +693,7 @@ class EventDrivenFleet:
                 observe_latencies(r.controller, r.decode_pool,
                                   self._obs.pop(r.name, []), finished)
                 self._obs[r.name] = []
-            evicted = r.decode_pool.take_evicted()
-            if evicted:
-                r.waiting[:0] = evicted
+            requeue_front(r.waiting, r.decode_pool.take_evicted())
             done.extend(finished)
             self._steps += 1
             # post-step admission as an ADMIT event at the step's end —
@@ -339,9 +719,9 @@ class EventDrivenFleet:
     def _run_decodes(self, live: List["Replica"]) -> Dict[str, List[Request]]:
         """Run one decode step on every live replica; homogeneous dense
         groups of >= fast_path_min pools sharing one params object go
-        through one fused jitted call."""
+        through fused jitted dispatches."""
         finished_by: Dict[str, List[Request]] = {}
-        groups: Dict[Tuple[Any, ...], List[Replica]] = {}
+        groups: Dict[Tuple[Any, ...], List["Replica"]] = {}
         for r in live:
             dp = r.decode_pool
             sig = (dp.cfg.name, id(dp.params), dp.paged, dp.max_batch,
@@ -353,28 +733,48 @@ class EventDrivenFleet:
             else:
                 for r in rs:
                     finished_by[r.name] = r.decode_pool.decode_once()
+                    self.stats.serial_decode_calls += 1
         return finished_by
 
     def _decode_fused(self, sig, reps: List["Replica"]) -> Dict[str, List[Request]]:
-        """One jitted step over K homogeneous dense pools: the per-pool
+        """Jitted steps over K homogeneous dense pools: the per-pool
         argument tuples form one pytree argument, so K XLA dispatches
-        collapse into one. Each pool's key split, sampling and accounting
-        are byte-for-byte the per-pool path's — only dispatch is shared."""
-        self.fused_calls += 1
+        collapse into ceil(K / max_fused_group). Each pool's key split,
+        sampling and accounting are byte-for-byte the per-pool path's —
+        only dispatch is shared. Chunk sizes pad to powers of two with a
+        repeat of the chunk's first pool (results discarded), so a
+        drifting fleet rebuilds O(log fleet) programs, not one per group
+        size."""
+        st = self.stats
         pools = [r.decode_pool for r in reps]
         pres = [p._decode_begin() for p in pools]
-        fn = self._fused_cache.get((sig, len(reps)))
-        if fn is None:
-            impl = pools[0]._decode_impl    # pure in cfg; shared across group
+        outs_all: List[Any] = []
+        for i in range(0, len(reps), self.max_fused_group):
+            chunk = pres[i:i + self.max_fused_group]
+            k = len(chunk)
+            p2 = self._pow2(k)
+            args_list = [pre["args"][1:] for pre in chunk]
+            args_list.extend([args_list[0]] * (p2 - k))
+            pool0 = pools[i]
 
-            def fused(params, per_pool):
-                return tuple(impl(params, *args) for args in per_pool)
+            def build(pool0=pool0):
+                impl = pool0._decode_impl   # pure in cfg; shared across group
 
-            fn = jax.jit(fused)
-            self._fused_cache[(sig, len(reps))] = fn
-        outs = fn(pools[0].params, tuple(pre["args"][1:] for pre in pres))
+                def make():
+                    def fused(params, per_pool):
+                        return tuple(impl(params, *args) for args in per_pool)
+
+                    return jax.jit(fused)
+
+                return _program(("decode", impl), make)
+
+            fn = self._fused_fn(("decode", sig, p2), build)
+            outs = fn(pool0.params, tuple(args_list))
+            st.fused_decode_calls += 1
+            st.pad_waste += p2 - k
+            outs_all.extend(outs[:k])
         return {r.name: p._decode_finish(pre, *out)
-                for r, p, pre, out in zip(reps, pools, pres, outs)}
+                for r, p, pre, out in zip(reps, pools, pres, outs_all)}
 
     # ------------------------------------------------------ warm / autoscaler
     def _schedule_warm(self, r: "Replica"):

@@ -64,8 +64,11 @@ from repro.serving.pool import (
     PhaseStats,
     Pool,
     Request,
+    acquire_request,
     head_validator,
     observe_latencies,
+    popleft,
+    requeue_front,
 )
 from repro.serving.router import JoinShortestQueue, Router, make_router
 from repro.serving.spec import FleetSpec, ReplicaSpec
@@ -145,7 +148,7 @@ class Scheduler:
             need = len(req.prompt)
             if need > self._credit:
                 break
-            waiting.pop(0)
+            popleft(waiting)
             self._credit -= need
             admit(req)
             self.migrations += 1
@@ -205,7 +208,10 @@ class Replica:
         self.scheduler = Scheduler(prefill_chunk_tokens)
         self.clock = clock
         self.virtual = isinstance(clock, VirtualClock)
-        self.waiting: List[Request] = []
+        # deque: admission pops the head per request — O(1) instead of the
+        # list's O(n) shuffle, which at 10^6 queued requests is the
+        # difference between a replay and a quadratic stall
+        self.waiting: Deque[Request] = deque()
         self.draining = False
         self.powered = True
         # warm-up window end (fleet clock): set by power_up(warmup_s=...);
@@ -285,10 +291,11 @@ class Replica:
         """Queue a request. ``arrival_s`` overrides the arrival stamp (the
         trace replay passes the trace's own timestamp so queueing delay that
         happened *during* a long step is still charged to TTFT)."""
-        req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens,
-                      temperature=temperature, eos_token_id=eos_token_id,
-                      bucket=bucket, replica=self.name)
+        req = acquire_request(self._uid, np.asarray(prompt, np.int32),
+                              max_new_tokens=max_new_tokens,
+                              temperature=temperature,
+                              eos_token_id=eos_token_id,
+                              bucket=bucket, replica=self.name)
         req.ledger.mark_arrival(self.clock() if arrival_s is None else arrival_s)
         self._uid += 1
         self.waiting.append(req)
@@ -360,9 +367,7 @@ class Replica:
             observe_latencies(self.controller, self.decode_pool, admitted, finished)
         # preempted requests go back to the queue head: they are the oldest
         # work in flight, and FIFO admission re-prefills them first
-        evicted = self.decode_pool.take_evicted()
-        if evicted:
-            self.waiting[:0] = evicted
+        requeue_front(self.waiting, self.decode_pool.take_evicted())
         return finished
 
     def busy(self) -> bool:
@@ -505,6 +510,10 @@ class Fleet:
         self.scale_events: List[ScaleEvent] = []
         self.arrivals_total = 0          # the schedule policy's rate signal
         self._round = 0
+        # the last event-engine replay's EngineStats counter block (None
+        # until run_trace(engine="events") completes) — what the serving
+        # benchmarks write into their JSON artifacts
+        self.last_engine_stats = None
         if autoscaler is not None:
             # the fleet starts at the policy floor: replicas beyond
             # min_replicas park immediately (zero joules until powered up)
@@ -845,6 +854,7 @@ class Fleet:
         *,
         max_steps: int = 1000000,
         engine: str = "events",
+        engine_opts: Optional[Dict[str, Any]] = None,
     ) -> List[Request]:
         """Replay an arrival trace across the fleet: each entry joins the
         router-chosen replica's queue when the serving clock crosses its
@@ -864,6 +874,10 @@ class Fleet:
           barrier (real time cannot be event-skipped).
         * ``"barrier"`` — the legacy lockstep driver: every busy replica
           takes one tick per round and the round syncs to the slowest.
+
+        ``engine_opts`` are forwarded to the ``EventDrivenFleet``
+        constructor (``fusion_quantum_s``, ``fuse_prefill``, ``on_finish``,
+        ...); ignored by the barrier driver.
         """
         if self.virtual and any(r.controller is None for r in self.replicas):
             raise ValueError(
@@ -874,7 +888,8 @@ class Fleet:
                              "expected 'events' or 'barrier'")
         if engine == "events" and self.virtual:
             from repro.serving.events import EventDrivenFleet
-            return EventDrivenFleet(self).run(trace, max_steps=max_steps)
+            return EventDrivenFleet(self, **(engine_opts or {})).run(
+                trace, max_steps=max_steps)
         pending = sorted(trace, key=lambda t: t.arrival_s)
         t_start = self.now_s()
         done: List[Request] = []

@@ -55,7 +55,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, List, Optional, Tuple
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,7 +86,108 @@ from repro.serving.paged_cache import NULL_PAGE, BlockAllocator, TrafficCounter
 EOS = 0
 
 
-@dataclasses.dataclass
+# ---------------------------------------------------------------------------
+# Shared jitted-callable cache. ``ModelConfig`` is a value-equal, hashable
+# dataclass, so every pool running the same config shares ONE traced program
+# per (kind, static-shape) key instead of compiling per pool — at 100
+# homogeneous replicas that turns 100 prefill + 100 scatter + 100 decode
+# compiles into one of each. The cached callables are pure functions of their
+# arguments (config and shape constants enter by closure FROM THE KEY), so
+# sharing cannot couple pool state.
+_JIT_CACHE: Dict[Tuple, Any] = {}
+
+
+def _cached(key: Tuple, build: Callable[[], Any]) -> Any:
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = _JIT_CACHE[key] = build()
+    return fn
+
+
+def prefill_impl_for(cfg: ModelConfig, max_seq_len: int):
+    """The unjitted batch-1 bucketed prefill body for (cfg, max_seq_len) —
+    also the building block the event engine's fused admission prefill
+    traces K times into one program."""
+    def build():
+        def prefill_impl(params, tokens, true_len, bucket):
+            cache1 = init_cache(cfg, 1, max_seq_len)
+            logits, cache1, _ = prefill(
+                params, cfg, tokens, cache1, prompt_lengths=true_len
+            )
+            return logits, cache1
+        return prefill_impl
+    return _cached(("prefill_impl", cfg, max_seq_len), build)
+
+
+def decode_impl_for(cfg: ModelConfig):
+    """The unjitted one-step dense decode body for ``cfg`` (the event
+    engine's fused decode traces it once per pool in a group)."""
+    def build():
+        def decode_impl(params, tokens, cache, lengths, active, key, temperature):
+            logits, new_cache, new_lengths = decode_step(
+                params, cfg, tokens, cache, lengths)
+            next_tok = Pool._sample(logits, key, temperature)
+            new_lengths = jnp.where(active, new_lengths, lengths)
+            return next_tok, new_cache, new_lengths
+        return decode_impl
+    return _cached(("decode_impl", cfg), build)
+
+
+def decode_paged_impl_for(cfg: ModelConfig):
+    def build():
+        def decode_paged_impl(params, tokens, cache, lengths, active, tables,
+                              key, temperature):
+            logits, new_cache, new_lengths = decode_step_paged(
+                params, cfg, tokens, cache, lengths, active, tables)
+            next_tok = Pool._sample(logits, key, temperature)
+            new_lengths = jnp.where(active, new_lengths, lengths)
+            return next_tok, new_cache, new_lengths
+        return decode_paged_impl
+    return _cached(("decode_paged_impl", cfg), build)
+
+
+def _scatter_impl(big_cache, small_cache, slot):
+    # stage-cache leaves are stacked (n_units, B, ...): batch axis is 1
+    return jax.tree.map(
+        lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+            big, small, slot, axis=1),
+        big_cache,
+        small_cache,
+    )
+
+
+def _multi_scatter_impl(big_cache, small_caches, slots):
+    """K batch-1 rows scattered into K slots in ONE traced program — the
+    event engine's ``_flush`` places a whole admission wave per dispatch.
+    Updates chain in order, so padding (a repeat of row 0 into slot 0) is
+    idempotent, not just inert."""
+    for small, slot in zip(small_caches, slots):
+        big_cache = _scatter_impl(big_cache, small, slot)
+    return big_cache
+
+
+# -------------------------------------------------------- queue primitives
+def popleft(waiting) -> "Request":
+    """Pop the queue head from a deque (O(1)) or a list (legacy O(n)) —
+    the one admission-queue pop used by scheduler/engine/validator code so
+    deque-backed queues and user-supplied lists both work."""
+    if isinstance(waiting, deque):
+        return waiting.popleft()
+    return waiting.pop(0)
+
+
+def requeue_front(waiting, evicted: Sequence["Request"]) -> None:
+    """Put preempted requests back at the queue head (oldest first), on a
+    deque or a list alike."""
+    if not evicted:
+        return
+    if isinstance(waiting, deque):
+        waiting.extendleft(reversed(evicted))
+    else:
+        waiting[:0] = evicted
+
+
+@dataclasses.dataclass(slots=True)
 class Request:
     uid: int
     prompt: np.ndarray                     # (L,) int32
@@ -127,6 +229,54 @@ class Request:
     @property
     def e2e_s(self) -> Optional[float]:
         return self.ledger.e2e_s
+
+
+# ------------------------------------------------------- request freelist
+# Replaying 10^6 requests builds (and drops) 10^6 Request + LatencyLedger
+# pairs; the freelist recycles them once a streaming consumer (the event
+# engine's ``on_finish`` hook) is done with one, keeping the hot loop
+# allocation-free and replay memory flat. ``slots=True`` on both classes
+# makes the recycled instances cheap to reset field-by-field.
+_REQUEST_FREELIST: List[Request] = []
+_REQUEST_FREELIST_CAP = 8192
+
+
+def acquire_request(uid: int, prompt: np.ndarray, *, max_new_tokens: int = 32,
+                    temperature: float = 0.0,
+                    eos_token_id: Optional[int] = None,
+                    bucket: str = "mixed",
+                    replica: Optional[str] = None) -> Request:
+    """A fresh-looking Request, recycled from the freelist when one is
+    available (fields fully reset by ``release_request``)."""
+    if _REQUEST_FREELIST:
+        req = _REQUEST_FREELIST.pop()
+        req.uid = uid
+        req.prompt = prompt
+        req.max_new_tokens = max_new_tokens
+        req.temperature = temperature
+        req.eos_token_id = eos_token_id
+        req.bucket = bucket
+        req.replica = replica
+        return req
+    return Request(uid=uid, prompt=prompt, max_new_tokens=max_new_tokens,
+                   temperature=temperature, eos_token_id=eos_token_id,
+                   bucket=bucket, replica=replica)
+
+
+def release_request(req: Request) -> None:
+    """Return a FINISHED request to the freelist. The caller promises to
+    hold no further references: output, ledger stamps and energy fields are
+    wiped here so the next ``acquire_request`` hands out a blank."""
+    if len(_REQUEST_FREELIST) >= _REQUEST_FREELIST_CAP:
+        return
+    req.output = []
+    req.prefill_s = req.decode_s = 0.0
+    req.prefill_j = req.decode_j = 0.0
+    req.decode_read_bytes = req.decode_write_bytes = 0
+    req.preemptions = 0
+    req.done = False
+    req.ledger.reset()
+    _REQUEST_FREELIST.append(req)
 
 
 @dataclasses.dataclass
@@ -224,7 +374,7 @@ def head_validator(waiting: List[Request], pool: "Pool") -> Callable[[], Request
             try:
                 pool.validate(req)
             except ValueError:
-                waiting.pop(0)
+                popleft(waiting)
                 raise
             validated = req
         return req
@@ -337,45 +487,58 @@ class Pool:
         # per-slot sampling temperature (0 = greedy), set at placement so a
         # mixed batch decodes each slot at its own Request.temperature
         self._slot_temp = np.zeros(max_batch, np.float32)
+        # host mirror of the current-token vector: placements write HERE
+        # (pure numpy) and ``_decode_begin`` ships the mirrors to the device
+        # once per step — instead of one eager ``.at[slot].set`` dispatch
+        # per placement on both ``lengths`` and ``cur_token``
+        self._host_cur_token = np.zeros(max_batch, np.int32)
+        # jitted-call dispatch counter (prefill + decode + scatter launched
+        # BY this pool; the event engine's fused dispatches count on the
+        # engine side) — the per-request-cost observable EngineStats reports
+        self.jit_dispatches = 0
 
-        self._jit_prefill = jax.jit(self._prefill_impl, static_argnames=("bucket",))
-        self._jit_decode = jax.jit(self._decode_impl)
-        self._jit_decode_paged = jax.jit(self._decode_paged_impl)
-        self._jit_scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
-        self._jit_scatter_paged = jax.jit(self._scatter_paged_impl, donate_argnums=(0,))
+        # jitted callables are shared across pools per (cfg, shape) — see
+        # the module-level cache above
+        self._prefill_impl = prefill_impl_for(cfg, max_seq_len)
+        self._decode_impl = decode_impl_for(cfg)
+        self._decode_paged_impl = decode_paged_impl_for(cfg)
+        self._jit_prefill = _cached(
+            ("prefill_jit", cfg, max_seq_len),
+            lambda: jax.jit(self._prefill_impl, static_argnames=("bucket",)))
+        self._jit_decode = _cached(
+            ("decode_jit", cfg), lambda: jax.jit(self._decode_impl))
+        self._jit_decode_paged = _cached(
+            ("decode_paged_jit", cfg), lambda: jax.jit(self._decode_paged_impl))
+        self._jit_scatter = _cached(
+            ("scatter_jit",), lambda: jax.jit(_scatter_impl, donate_argnums=(0,)))
+        if paged:
+            self._jit_scatter_paged = _cached(
+                ("scatter_paged_jit", cfg, self.block_tables.shape[1],
+                 kv_block_size),
+                lambda: jax.jit(self._make_scatter_paged_impl(),
+                                donate_argnums=(0,)))
 
     # ------------------------------------------------------------- internals
-    def _prefill_impl(self, params, tokens, true_len, bucket):
-        cache1 = init_cache(self.cfg, 1, self.max_seq_len)
-        logits, cache1, _ = prefill(
-            params, self.cfg, tokens, cache1, prompt_lengths=true_len
-        )
-        return logits, cache1
-
-    def _scatter_impl(self, big_cache, small_cache, slot):
-        # stage-cache leaves are stacked (n_units, B, ...): batch axis is 1
-        return jax.tree.map(
-            lambda big, small: jax.lax.dynamic_update_slice_in_dim(big, small, slot, axis=1),
-            big_cache,
-            small_cache,
-        )
-
-    def _scatter_paged_impl(self, big_cache, small_cache, page_map, slot):
+    def _make_scatter_paged_impl(self):
         """Copy-on-migrate: blocked rows of the batch-1 prefill cache go to
         the pages ``page_map`` names (unused logical blocks map to the null
         page, which absorbs the garbage rows); slot-layout state leaves
         scatter into the slot row like the dense path."""
         nb = self.block_tables.shape[1]
         bs = self.kv_block_size
+        layout = self._layout
 
-        def scat(big, small, is_paged):
-            if is_paged:
-                rows = small[:, 0]                                  # (n_units, L_max, ...)
-                blocks = rows.reshape(rows.shape[0], nb, bs, *rows.shape[2:])
-                return big.at[:, page_map].set(blocks.astype(big.dtype))
-            return jax.lax.dynamic_update_slice_in_dim(big, small, slot, axis=1)
+        def scatter_paged_impl(big_cache, small_cache, page_map, slot):
+            def scat(big, small, is_paged):
+                if is_paged:
+                    rows = small[:, 0]                              # (n_units, L_max, ...)
+                    blocks = rows.reshape(rows.shape[0], nb, bs, *rows.shape[2:])
+                    return big.at[:, page_map].set(blocks.astype(big.dtype))
+                return jax.lax.dynamic_update_slice_in_dim(big, small, slot, axis=1)
 
-        return jax.tree.map(scat, big_cache, small_cache, self._layout)
+            return jax.tree.map(scat, big_cache, small_cache, layout)
+
+        return scatter_paged_impl
 
     @staticmethod
     def _sample(logits, key, temperature):
@@ -394,21 +557,6 @@ class Pool:
 
         return jax.lax.cond(
             jnp.any(temperature > 0.0), sampled, lambda _: greedy, None)
-
-    def _decode_impl(self, params, tokens, cache, lengths, active, key, temperature):
-        logits, new_cache, new_lengths = decode_step(params, self.cfg, tokens, cache, lengths)
-        next_tok = self._sample(logits, key, temperature)
-        new_lengths = jnp.where(active, new_lengths, lengths)
-        return next_tok, new_cache, new_lengths
-
-    def _decode_paged_impl(self, params, tokens, cache, lengths, active, tables, key,
-                           temperature):
-        logits, new_cache, new_lengths = decode_step_paged(
-            params, self.cfg, tokens, cache, lengths, active, tables
-        )
-        next_tok = self._sample(logits, key, temperature)
-        new_lengths = jnp.where(active, new_lengths, lengths)
-        return next_tok, new_cache, new_lengths
 
     # ------------------------------------------------------- energy plumbing
     def set_operating_point(self, op: OperatingPoint, prefill_op: Optional[OperatingPoint] = None):
@@ -516,8 +664,8 @@ class Pool:
         mask = self.active_mask()
         if not mask.any():
             return 0.0
-        # one device transfer for the whole vector — this runs every tick
-        return float(np.asarray(self.lengths)[mask].mean())
+        # the host mirror tracks the device lengths exactly — no transfer
+        return float(self._host_lengths[mask].mean())
 
     def _ensure_decode_state(self):
         if self.cache is None:
@@ -611,24 +759,43 @@ class Pool:
                     break                         # evicted ourselves; requeued
 
     # ------------------------------------------------------------ phase work
-    def prefill_request(self, req: Request) -> Tuple[int, Any]:
-        """Run the bucketed batch-1 prefill; returns (first_token, cache row).
-
-        The returned cache row is placed with ``place`` — on this pool for the
-        single-pool engine, on the decode pool for the disaggregated cluster.
-        """
+    def prefill_tokens(self, req: Request) -> Tuple[np.ndarray, np.ndarray, int]:
+        """The (tokens, true_len, bucket) argument triple ``_jit_prefill``
+        takes for ``req`` — split out so the event engine's fused admission
+        path builds the SAME padded inputs the serial path would."""
         l = len(req.prompt)
         bucket = min(_bucket(l), self.max_seq_len)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :l] = req.prompt
+        return toks, np.asarray([l], np.int32), bucket
+
+    def prefill_request(self, req: Request, *,
+                        precomputed: Optional[Tuple[Any, Any]] = None) -> Tuple[int, Any]:
+        """Run the bucketed batch-1 prefill; returns (first_token, cache row).
+
+        The returned cache row is placed with ``place`` — on this pool for the
+        single-pool engine, on the decode pool for the disaggregated cluster.
+
+        ``precomputed`` is the fused-admission handoff: a (logits, cache row)
+        pair an engine already computed in a batched dispatch. ONLY the jit
+        call is skipped — clock advance, gauge bracketing, ledger stamps,
+        RNG-split order and energy accounting run exactly as the serial
+        path, so fused admission stays byte-identical per request.
+        """
+        l = len(req.prompt)
         self._in_phase_call = True
         self._refresh_gauge()
         t0 = self.clock()
         req.ledger.mark_admitted(t0)
         try:
-            logits, cache1 = self._jit_prefill(
-                self.params, jnp.asarray(toks), jnp.asarray([l], jnp.int32), bucket=bucket
-            )
+            if precomputed is None:
+                toks, true_len, bucket = self.prefill_tokens(req)
+                logits, cache1 = self._jit_prefill(
+                    self.params, toks, true_len, bucket=bucket
+                )
+                self.jit_dispatches += 1
+            else:
+                logits, cache1 = precomputed
             row = np.asarray(logits)[0]
             if req.temperature > 0.0:
                 self._key, sub = jax.random.split(self._key)
@@ -653,6 +820,30 @@ class Pool:
         req.prefill_j += joules
         return first, cache1
 
+    def _place_bookkeeping(self, req: Request, first_token: int, length: int,
+                           first_token_s: Optional[float]) -> int:
+        """Everything ``place`` does EXCEPT the cache scatter: slot choice,
+        host-mirror writes (``lengths``/``cur_token`` reach the device once
+        per decode step via ``_decode_begin``, not per placement), stamps,
+        gauge. Shared by ``place`` and the multi-row ``place_many``."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("place() on a full pool — check can_admit() first")
+        self._ensure_decode_state()
+        slot = free[0]
+        self._host_lengths[slot] = length
+        self._host_cur_token[slot] = first_token
+        self._admit_counter += 1
+        self._admit_seq[slot] = self._admit_counter
+        self._slot_temp[slot] = req.temperature
+        req.output.append(first_token)
+        req.ledger.mark_first_token(
+            self.clock() if first_token_s is None else first_token_s)
+        self.slot_req[slot] = req
+        self.peak_occupancy = max(self.peak_occupancy, self.occupancy())
+        self._refresh_gauge()
+        return slot
+
     def place(self, req: Request, cache1: Any, first_token: int, length: int,
               *, first_token_s: Optional[float] = None) -> int:
         """Scatter a filled batch-1 cache row into a free slot (migration).
@@ -663,11 +854,7 @@ class Pool:
         with per-pool clocks the prefill timeline produced the token at its
         own (earlier) time, and the event engine may place the row after
         the decode timeline has moved past it."""
-        free = self.free_slots()
-        if not free:
-            raise RuntimeError("place() on a full pool — check can_admit() first")
-        self._ensure_decode_state()
-        slot = free[0]
+        slot = self._place_bookkeeping(req, first_token, length, first_token_s)
         if self.paged:
             need = self.allocator.blocks_for_tokens(length + 1)
             blocks = self.allocator.alloc(need, owner=req.uid)
@@ -684,19 +871,37 @@ class Pool:
             )
         else:
             self.cache = self._jit_scatter(self.cache, cache1, slot)
-        self.lengths = self.lengths.at[slot].set(length)
-        self.cur_token = self.cur_token.at[slot].set(first_token)
-        self._host_lengths[slot] = length
-        self._admit_counter += 1
-        self._admit_seq[slot] = self._admit_counter
-        self._slot_temp[slot] = req.temperature
-        req.output.append(first_token)
-        req.ledger.mark_first_token(
-            self.clock() if first_token_s is None else first_token_s)
-        self.slot_req[slot] = req
-        self.peak_occupancy = max(self.peak_occupancy, self.occupancy())
-        self._refresh_gauge()
+        self.jit_dispatches += 1
         return slot
+
+    def place_many(self, items: Sequence[Tuple[Request, Any, int, int,
+                                               Optional[float]]]) -> List[int]:
+        """Place K prefilled rows with ONE jitted scatter dispatch (dense
+        pools). ``items`` are (req, cache1, first_token, length,
+        first_token_s) in placement order; per-request bookkeeping, stamps
+        and gauge updates run request-by-request exactly like K ``place``
+        calls — only the K cache scatters fuse into one chained program
+        (byte-identical final cache: distinct slots, order preserved).
+        Group sizes pad to powers of two with an idempotent repeat of row 0
+        so the trace count stays O(log max_batch). Paged pools fall back to
+        sequential ``place`` (block allocation is request-granular)."""
+        if self.paged or len(items) == 1:
+            return [self.place(req, cache1, first, length,
+                               first_token_s=ts)
+                    for req, cache1, first, length, ts in items]
+        slots = [self._place_bookkeeping(req, first, length, ts)
+                 for req, cache1, first, length, ts in items]
+        rows = [cache1 for _, cache1, _, _, _ in items]
+        pad_slots = list(slots)
+        p = 1 << (len(rows) - 1).bit_length()
+        rows.extend([rows[0]] * (p - len(rows)))
+        pad_slots.extend([pad_slots[0]] * (p - len(pad_slots)))
+        fn = _cached(
+            ("scatter_multi_jit", self.cfg, self.max_seq_len, p),
+            lambda: jax.jit(_multi_scatter_impl, donate_argnums=(0,)))
+        self.cache = fn(self.cache, tuple(rows), tuple(pad_slots))
+        self.jit_dispatches += 1
+        return slots
 
     def _req_eos(self, req: Request) -> int:
         return self.eos_token_id if req.eos_token_id is None else req.eos_token_id
@@ -716,15 +921,20 @@ class Pool:
             return None
         self._ensure_decode_state()
         self._key, sub = jax.random.split(self._key)
-        temps = jnp.asarray(self._slot_temp)
         t0 = self.clock()
+        # ship the host mirrors once per step (placements only wrote numpy);
+        # jit moves numpy args to the device inside dispatch, so no eager
+        # per-array device_put is paid here. Copies because the mirrors
+        # mutate between this dispatch and the next placement.
+        toks = self._host_cur_token.copy()
+        lengths = self._host_lengths.astype(np.int32)
+        temps = self._slot_temp.copy()
         if self.paged:
-            args = (self.params, self.cur_token, self.cache, self.lengths,
-                    jnp.asarray(active), jnp.asarray(self.block_tables), sub,
-                    temps)
+            args = (self.params, toks, self.cache, lengths,
+                    active, self.block_tables.copy(), sub, temps)
         else:
-            args = (self.params, self.cur_token, self.cache, self.lengths,
-                    jnp.asarray(active), sub, temps)
+            args = (self.params, toks, self.cache, lengths,
+                    active, sub, temps)
         return {"active": active, "t0": t0, "args": args}
 
     def decode_once(self) -> List[Request]:
@@ -737,6 +947,7 @@ class Pool:
             return []
         jit_fn = self._jit_decode_paged if self.paged else self._jit_decode
         next_tok, cache, lengths = jit_fn(*pre["args"])
+        self.jit_dispatches += 1
         return self._decode_finish(pre, next_tok, cache, lengths)
 
     def _decode_finish(self, pre: dict, next_tok, cache, lengths) -> List[Request]:
@@ -756,6 +967,9 @@ class Pool:
         dt = self.clock() - t0
         n_active = int(active.sum())
         self.cur_token = next_tok
+        # keep the host mirror in lock-step with the device vector; copy
+        # because placements mutate it in place before the next step
+        self._host_cur_token = np.array(next_np, dtype=np.int32)
 
         # ---- energy + traffic attribution for this step ------------------
         mj = self._mj_per_token()

@@ -20,6 +20,11 @@ Policies:
   "power a replica down vs underclock all of them" question. A headroom
   gate keeps it from queueing unboundedly: replicas already holding a full
   batch worth of work are skipped while any open one remains.
+* ``rr`` — round-robin: the O(1) scale baseline. Every other policy
+  inspects all N candidates per arrival, which at 10^6 requests over 100+
+  replicas is 10^8+ Python comparisons before any model work; round-robin
+  cycles fleet order with a single cursor. On aligned waves it lands one
+  request per replica exactly like JSQ, without the scan.
 * ``affinity`` — arch-affinity: length-bucketed dispatch across
   heterogeneous replicas keyed off the trace's ``bucket`` tag. Long-context
   requests go to the architecture whose energy curve is flattest there
@@ -73,6 +78,28 @@ class JoinShortestQueue:
     def route(self, candidates, *, prompt_len, max_new_tokens,
               bucket="mixed"):
         return _jsq_pick(prefer_warm(candidates))
+
+
+class RoundRobin:
+    """O(1) routing for million-request replays: cycle fleet order.
+
+    The cursor advances over replica NAMES, not candidate indices, so a
+    replica joining/leaving the candidate set (autoscaler power events)
+    shifts no other replica's turn; a vanished candidate just falls
+    through to the next. Deterministic: a pure function of the arrival
+    sequence and the candidate sets it saw."""
+
+    name = "rr"
+
+    def __init__(self):
+        self._next = 0
+
+    def route(self, candidates, *, prompt_len, max_new_tokens,
+              bucket="mixed"):
+        cands = prefer_warm(candidates)
+        pick = cands[self._next % len(cands)]
+        self._next += 1
+        return pick
 
 
 class EnergyAware:
@@ -169,6 +196,7 @@ class ArchAffinity:
 
 ROUTERS = {
     JoinShortestQueue.name: JoinShortestQueue,
+    RoundRobin.name: RoundRobin,
     EnergyAware.name: EnergyAware,
     ArchAffinity.name: ArchAffinity,
 }

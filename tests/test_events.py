@@ -10,6 +10,8 @@ import jax
 import numpy as np
 import pytest
 
+from _propcheck import given, settings, strategies
+
 from repro.configs import get_config, reduced_config
 from repro.core import EnergyModel, VirtualClock
 from repro.core.latency import summarize_latency
@@ -31,10 +33,23 @@ from repro.serving import (
 ARCH = "gemma-2b"
 
 
+_SETUP_CACHE: dict = {}
+
+
+def _setup_cached():
+    """Fixture-free variant of ``setup`` for property tests (the
+    _propcheck fallback wrapper hides the signature from pytest, so
+    fixtures can't be requested there)."""
+    if not _SETUP_CACHE:
+        cfg = reduced_config(ARCH)
+        _SETUP_CACHE["v"] = (cfg, {ARCH: init_params(cfg,
+                                                     jax.random.PRNGKey(0))})
+    return _SETUP_CACHE["v"]
+
+
 @pytest.fixture(scope="module")
 def setup():
-    cfg = reduced_config(ARCH)
-    return cfg, {ARCH: init_params(cfg, jax.random.PRNGKey(0))}
+    return _setup_cached()
 
 
 def _rspec(name, batch=2, max_seq_len=64, chunk=64):
@@ -211,8 +226,198 @@ class TestFusedFastPath:
         fused_eng, fused = run(2)
         seq_eng, seq = run(99)
         assert fused == seq
-        assert fused_eng._fused_cache, "fast path was never exercised"
-        assert not seq_eng._fused_cache
+
+        def decode_fused(eng):
+            return [k for k in eng._fused_cache if k[0] == "decode"]
+
+        assert decode_fused(fused_eng), "fast path was never exercised"
+        assert not decode_fused(seq_eng)
+        assert fused_eng.stats.fused_decode_calls > 0
+        assert seq_eng.stats.fused_decode_calls == 0
+
+
+class TestFusedPrefill:
+    def _mixed_trace(self, cfg, n=24):
+        """Same-instant arrival bursts with mixed temperatures so the
+        RNG-split order is load-bearing, plus staggered stragglers."""
+        trace = []
+        rng = np.random.default_rng(5)
+        for i in range(n):
+            t = (i // 8) * 0.002            # bursts of 8 at the same instant
+            r = _req(int(rng.integers(4, 24)), t, 4, seed=100 + i)
+            if i % 3 == 0:
+                r = dataclasses.replace(r, temperature=0.7)
+            trace.append(r)
+        return trace
+
+    def _run(self, params, trace, n=4, **opts):
+        fleet = _fleet(params, n=n)
+        done = fleet.run_trace(trace, engine_opts=opts)
+        blob = _blob(done, fleet) + json.dumps(
+            {"modelled": {n_: fleet.by_name[n_].decode_stats.decode_j
+                          + fleet.by_name[n_].prefill_stats.prefill_j
+                          for n_ in fleet.by_name},
+             "measured": fleet.measured_energy_j()}, sort_keys=True)
+        return fleet, blob
+
+    def _aligned_backlog(self, n=16):
+        """Identical prompts, one same-instant burst past fleet capacity:
+        replicas stay step-aligned, so the backlog admits through TIED
+        post-step ADMIT events — the multi-replica grouping path."""
+        trace = [_req(16, 0.0, 4, seed=200 + i) for i in range(n)]
+        return [dataclasses.replace(t, temperature=0.7) if i % 3 == 0 else t
+                for i, t in enumerate(trace)]
+
+    def test_fused_prefill_byte_identical_to_serial_admission(self, setup):
+        """The tentpole contract: batching admission prefills into grouped
+        dispatches changes NOTHING observable — tokens, every ledger
+        stamp, modelled AND measured joules — because only the jit call is
+        shared; per-pool clock/gauge/RNG/stamp sequences replay serially.
+        Checked on a drifting mixed-length trace (single-tick groups) and
+        an aligned backlog burst (tied multi-replica ADMIT groups)."""
+        cfg, params = setup
+        for trace in (self._mixed_trace(cfg), self._aligned_backlog()):
+            fused_fleet, fused = self._run(params, trace, fuse_prefill=True)
+            serial_fleet, serial = self._run(params, trace,
+                                             fuse_prefill=False)
+            assert fused == serial
+            fs = fused_fleet.last_engine_stats
+            ss = serial_fleet.last_engine_stats
+            assert fs.fused_prefill_reqs == len(trace)
+            assert ss.fused_prefill_calls == 0 and ss.fused_prefill_reqs == 0
+            assert fs.prefills == ss.prefills == len(trace)
+            assert fs.jit_dispatches <= ss.jit_dispatches
+
+    def test_aligned_backlog_groups_prefills(self, setup):
+        """The point of the exercise: on the aligned burst the backlog's
+        prefills group (fewer dispatches than requests) and total jit
+        dispatches drop strictly below the serial engine's."""
+        cfg, params = setup
+        trace = self._aligned_backlog()
+        fused_fleet, _ = self._run(params, trace, fuse_prefill=True)
+        serial_fleet, _ = self._run(params, trace, fuse_prefill=False)
+        fs, ss = fused_fleet.last_engine_stats, serial_fleet.last_engine_stats
+        assert fs.fused_prefill_calls < fs.fused_prefill_reqs
+        assert fs.jit_dispatches < ss.jit_dispatches
+
+    def test_engine_stats_accounting_is_consistent(self, setup):
+        """EngineStats internal consistency on a real replay: placements
+        match prefills, coverage fractions are sane, peak heap is small
+        under the lazy arrival feed."""
+        cfg, params = setup
+        trace = self._mixed_trace(cfg)
+        fleet, _ = self._run(params, trace)
+        st = fleet.last_engine_stats
+        assert st.placements == st.prefills == len(trace)
+        assert st.fused_prefill_reqs + st.serial_prefill_calls == st.prefills
+        assert 0.0 <= st.fused_prefill_coverage <= 1.0
+        assert 0.0 <= st.fused_decode_coverage <= 1.0
+        assert st.events == sum(st.events_by_kind.values())
+        assert st.decode_steps > 0
+        # lazy arrival feed: the heap never holds the whole trace
+        assert st.peak_heap < len(trace)
+        d = st.as_dict()
+        assert d["jit_dispatches"] == st.jit_dispatches
+        json.dumps(d)                        # artifact-serialisable
+
+
+class TestFusionQuantum:
+    def test_quantum_zero_byte_identical_to_exact_tie(self, setup):
+        """``fusion_quantum_s=0`` must be byte-identical to the exact-tie
+        engine — same tokens, stamps, joules, same dispatch counts."""
+        cfg, params = setup
+        trace = [_req(16, 0.002 * (i % 5), 6, seed=20 + i) for i in range(12)]
+
+        def run(**opts):
+            fleet = _fleet(params, n=4)
+            done = fleet.run_trace(trace, engine_opts=opts)
+            return (_blob(done, fleet)
+                    + json.dumps(fleet.measured_energy_j(), sort_keys=True),
+                    fleet.last_engine_stats)
+        base, st0 = run()
+        quant, st1 = run(fusion_quantum_s=0.0)
+        assert base == quant
+        assert st0.fused_decode_calls == st1.fused_decode_calls
+        assert st0.events == st1.events
+
+    def test_quantum_window_fuses_drifted_heterogeneous_steps(self, setup):
+        """Replicas with different batch sizes drift off exact ties; a
+        quantum of one step time re-fuses their dispatches (strictly fewer
+        decode dispatches) without changing any token."""
+        cfg, params = setup
+        # staggered arrivals => decode clocks drift apart by sub-step offsets
+        trace = [_req(16, 1e-4 * i, 8, seed=30 + i) for i in range(8)]
+
+        def run(q):
+            fleet = _fleet(params, n=4)
+            done = fleet.run_trace(trace, engine_opts={"fusion_quantum_s": q})
+            outs = [r.output for r in sorted(done, key=lambda r: r.uid)]
+            return outs, fleet.last_engine_stats
+        outs0, st0 = run(0.0)
+        outs1, st1 = run(0.5)               # >> any step time: max re-fusion
+        assert outs1 == outs0
+        assert st1.fused_decode_calls + st1.serial_decode_calls <= \
+            st0.fused_decode_calls + st0.serial_decode_calls
+        assert st1.fused_decode_coverage >= st0.fused_decode_coverage
+
+_QUANTA_BASELINES: dict = {}
+
+
+@settings(max_examples=8, deadline=None)
+@given(q=strategies.floats(min_value=0.0, max_value=0.25),
+       seed=strategies.integers(min_value=0, max_value=7))
+def test_random_quanta_never_change_token_streams(q, seed):
+    """Property (satellite): fusion grouping is pure dispatch policy —
+    under ANY quantum the per-request token streams equal the quantum-0
+    replay's, because each pool still steps at its own scheduled time on
+    its own clock. (Module-level: the propcheck fallback can't thread
+    pytest fixtures through ``@given``.)"""
+    cfg, params = _setup_cached()
+    rng = np.random.default_rng(seed)
+    trace = [_req(int(rng.integers(4, 20)), float(rng.uniform(0, 0.01)),
+                  int(rng.integers(2, 6)), seed=seed * 100 + i)
+             for i in range(10)]
+    base = _QUANTA_BASELINES.get(seed)
+    if base is None:
+        fleet = _fleet(params, n=3)
+        done = fleet.run_trace(trace)
+        base = _QUANTA_BASELINES[seed] = {r.uid: r.output for r in done}
+    fleet = _fleet(params, n=3)
+    done = fleet.run_trace(trace, engine_opts={"fusion_quantum_s": float(q)})
+    assert {r.uid: r.output for r in done} == base
+
+
+class TestFusedCacheBuckets:
+    def test_trace_count_logarithmic_on_drifting_fleet(self, setup):
+        """Satellite: pow2 group-size bucketing. Drive group sizes through
+        many distinct values (staggered arrivals + different finish times
+        on 9 replicas) and assert the engine built O(log fleet) fused
+        decode programs, not one per distinct group size."""
+        cfg, params = setup
+        rng = np.random.default_rng(7)
+        trace = [_req(16, 2e-4 * i, int(rng.integers(2, 10)), seed=40 + i)
+                 for i in range(18)]
+        fleet = _fleet(params, n=9)
+        # staggered arrivals mean exact ties never happen — the quantum is
+        # what re-fuses the drifted steps into variable-size groups
+        eng = EventDrivenFleet(fleet, fast_path_min=2, fusion_quantum_s=0.5)
+        eng.run(trace)
+        decode_keys = [k for k in eng._fused_cache if k[0] == "decode"]
+        sizes = {k[2] for k in decode_keys}
+        assert all(s & (s - 1) == 0 for s in sizes), "non-pow2 group size"
+        # 9 replicas -> at most sizes {2, 4, 8, 16}; the engine must not
+        # have built one program per distinct raw group size (up to 8)
+        assert len(decode_keys) <= 4
+        assert eng.stats.fused_decode_calls > 0
+
+    def test_fused_cache_is_capped(self, setup):
+        cfg, params = setup
+        fleet = _fleet(params, n=2)
+        eng = EventDrivenFleet(fleet, fused_cache_cap=4)
+        for i in range(10):                  # synthetic inserts
+            eng._fused_fn(("decode", ("sig", i), 2), lambda: object())
+        assert len(eng._fused_cache) <= 4
+        assert eng.stats.fused_traces == 10
 
 
 class TestAutoscalerEvents:
