@@ -23,6 +23,7 @@ def main() -> None:
         serve_cluster,
         serve_events,
         serve_fleet,
+        serve_prefix,
         serve_scale,
         serve_trace,
         table1_power_cap,
@@ -43,6 +44,7 @@ def main() -> None:
         serve_autoscale,
         serve_events,
         serve_scale,
+        serve_prefix,
         tpu_native,
         kernels_micro,
         roofline_report,

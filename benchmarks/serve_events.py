@@ -200,6 +200,15 @@ def run(smoke: bool = False, write_json: bool = False):
         f"byte_identical={identical};sha={sha_a[:16]}",
     ))
 
+    # ---- prefix sharing defaults off: this fleet must be untouched by it --
+    es = first["engine_stats"]
+    if (es["prefix_hits"], es["prefix_cow_splits"],
+            es["saved_prefill_j"]) != (0, 0, 0.0):
+        violations.append(
+            f"prefix sharing leaked into a sharing-off fleet: "
+            f"hits={es['prefix_hits']} cow={es['prefix_cow_splits']} "
+            f"saved_j={es['saved_prefill_j']}")
+
     # ---- the fused fast path carried the run -----------------------------
     if first["fused_calls"] == 0:
         violations.append("fused fast path never fired")

@@ -243,6 +243,14 @@ def run(smoke: bool = False, write_json: bool = False):
         "serve_scale/determinism", 0.0,
         f"byte_identical={identical};sha={sha_a[:16]}",
     ))
+    # prefix sharing defaults off: this fleet must be untouched by it
+    es = first["engine_stats"]
+    if (es["prefix_hits"], es["prefix_cow_splits"],
+            es["saved_prefill_j"]) != (0, 0, 0.0):
+        violations.append(
+            f"prefix sharing leaked into a sharing-off fleet: "
+            f"hits={es['prefix_hits']} cow={es['prefix_cow_splits']} "
+            f"saved_j={es['saved_prefill_j']}")
     if first["dispatches_per_request"] >= DISPATCH_CEILING:
         violations.append(
             f"{first['dispatches_per_request']:.3f} jit dispatches/request "

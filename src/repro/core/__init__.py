@@ -49,6 +49,8 @@ from repro.core.traces import (
     BUCKETS,
     TracedRequest,
     diurnal_arrivals,
+    generate_conversation_trace,
+    generate_fanout_trace,
     generate_trace,
     onoff_arrivals,
     poisson_arrivals,
@@ -69,6 +71,7 @@ __all__ = [
     "VirtualClock",
     "LatencyLedger", "LatencySummary", "percentile", "summarize_latency",
     "BUCKETS", "TracedRequest", "generate_trace",
+    "generate_conversation_trace", "generate_fanout_trace",
     "poisson_arrivals", "onoff_arrivals", "diurnal_arrivals",
     "HypothesisResult", "evaluate_hypotheses",
     "Record", "characterize", "filter_records", "to_csv",

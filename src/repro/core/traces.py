@@ -46,13 +46,20 @@ BUCKETS = ("short", "long", "mixed")
 
 @dataclasses.dataclass(frozen=True)
 class TracedRequest:
-    """One trace entry: when it arrives and what it asks for."""
+    """One trace entry: when it arrives and what it asks for.
+
+    ``conv``/``parent``/``turn`` tie tree-shaped workloads together
+    (conversation id, index of the parent entry in the trace list, depth in
+    the tree); flat traces leave the defaults (-1, -1, 0)."""
 
     arrival_s: float
     prompt: np.ndarray                  # (L,) int32 token ids
     max_new_tokens: int
     temperature: float = 0.0
     bucket: str = "mixed"               # length-bucket tag, see BUCKETS
+    conv: int = -1                      # conversation/tree id (-1: flat)
+    parent: int = -1                    # trace index of the parent (-1: root)
+    turn: int = 0                       # depth in the tree (root = 0)
 
     @property
     def prompt_len(self) -> int:
@@ -192,3 +199,138 @@ def generate_trace(
             bucket=bucket,
         ))
     return out
+
+
+# ------------------------------------------------------- conversation trees
+def _tokens(rng: np.random.Generator, n: int, cfg: ModelConfig) -> np.ndarray:
+    """``n`` seeded token ids that avoid the config's EOS id (greedy replays
+    must never stop early by accident of the prompt distribution)."""
+    toks = rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+    if cfg.eos_token_id != 0:
+        toks[toks == cfg.eos_token_id] = 2 if cfg.eos_token_id == 1 else 1
+    return toks
+
+
+def _draw(rng: np.random.Generator, lo_hi: Tuple[int, int]) -> int:
+    lo, hi = lo_hi
+    if not 0 <= lo <= hi:
+        raise ValueError(f"need 0 <= lo <= hi, got {lo_hi}")
+    return int(rng.integers(lo, hi + 1))
+
+
+def _sort_tree(out: List[TracedRequest]) -> List[TracedRequest]:
+    """Stable-sort a tree trace by arrival and remap ``parent`` indices to
+    the sorted positions (parents always arrive strictly first, so every
+    remapped parent index precedes its child)."""
+    order = sorted(range(len(out)), key=lambda i: (out[i].arrival_s, i))
+    remap = {old: new for new, old in enumerate(order)}
+    return [dataclasses.replace(
+        out[old], parent=remap[out[old].parent] if out[old].parent >= 0 else -1)
+        for old in order]
+
+
+def generate_conversation_trace(
+    cfg: ModelConfig,
+    conversations: int,
+    *,
+    turns: int = 4,
+    system_len: int = 48,
+    user_len: Tuple[int, int] = (8, 24),
+    max_new_tokens: Tuple[int, int] = (6, 14),
+    think_s: Tuple[float, float] = (2.0, 4.0),
+    start_gap_s: float = 1.0,
+    seed: int = 0,
+    max_total_len: int = 128,
+    temperature: float = 0.0,
+) -> List[TracedRequest]:
+    """Multi-turn chat as a prefix-sharing workload: each conversation is a
+    chain of requests whose prompt is the WHOLE prior prompt plus a fresh
+    user turn, so turn k's prompt extends turn k-1's byte-for-byte — the
+    trunk a shared-prefix cache serves from registered pages. (Assistant
+    replies are not folded back into later prompts: the trace is
+    model-independent, so reuse is metered on the prompt trunk only.)
+
+    Turn k arrives a drawn ``think_s`` gap after turn k-1 — user think time,
+    sized so on the reduced virtual-time replays the parent has finished
+    (and donated its pages) before the child lands. A chain stops early
+    when the next prompt would not fit ``max_total_len`` with its decode
+    budget. Conversations start ``start_gap_s`` apart. One seeded Generator
+    drives every draw: (cfg, args, seed) -> byte-identical trace.
+    """
+    if conversations < 1 or turns < 1:
+        raise ValueError("need conversations >= 1 and turns >= 1")
+    if system_len < 1:
+        raise ValueError("system_len must be >= 1")
+    rng = np.random.default_rng(seed)
+    out: List[TracedRequest] = []
+    for c in range(conversations):
+        t = c * start_gap_s
+        prompt = _tokens(rng, system_len + _draw(rng, user_len), cfg)
+        parent = -1
+        for k in range(turns):
+            new = _draw(rng, max_new_tokens)
+            if len(prompt) + new > max_total_len:
+                break
+            out.append(TracedRequest(
+                arrival_s=float(t), prompt=prompt, max_new_tokens=new,
+                temperature=temperature, bucket="short",
+                conv=c, parent=parent, turn=k,
+            ))
+            parent = len(out) - 1
+            t += float(rng.uniform(*think_s))
+            prompt = np.concatenate([prompt, _tokens(rng, _draw(rng, user_len), cfg)])
+    return _sort_tree(out)
+
+
+def generate_fanout_trace(
+    cfg: ModelConfig,
+    trunks: int,
+    *,
+    fanout: int = 4,
+    trunk_len: int = 56,
+    child_suffix: Tuple[int, int] = (0, 8),
+    max_new_tokens: Tuple[int, int] = (6, 14),
+    gap_s: Tuple[float, float] = (2.0, 3.0),
+    start_gap_s: float = 1.0,
+    seed: int = 0,
+    max_total_len: int = 128,
+    temperature: float = 0.0,
+) -> List[TracedRequest]:
+    """Agentic fan-out: one trunk request, then ``fanout`` children whose
+    prompts all start with the IDENTICAL trunk tokens plus a short drawn
+    suffix — ``child_suffix`` may draw 0, the exact-fork case where the
+    child's first divergent token is its first *decode* write into the
+    trunk's shared tail block (the copy-on-write split path). Children
+    arrive a drawn ``gap_s`` after the trunk (it has finished and donated
+    its pages by then on the reduced replays); siblings land in drawn-gap
+    order. Seeded and byte-deterministic like every generator here."""
+    if trunks < 1 or fanout < 1:
+        raise ValueError("need trunks >= 1 and fanout >= 1")
+    if trunk_len < 1:
+        raise ValueError("trunk_len must be >= 1")
+    rng = np.random.default_rng(seed)
+    out: List[TracedRequest] = []
+    for c in range(trunks):
+        t0 = c * start_gap_s
+        trunk = _tokens(rng, trunk_len, cfg)
+        new = _draw(rng, max_new_tokens)
+        new = max(1, min(new, max_total_len - trunk_len))
+        out.append(TracedRequest(
+            arrival_s=float(t0), prompt=trunk, max_new_tokens=new,
+            temperature=temperature, bucket="short",
+            conv=c, parent=-1, turn=0,
+        ))
+        root = len(out) - 1
+        for _ in range(fanout):
+            sfx = _draw(rng, child_suffix)
+            prompt = (np.concatenate([trunk, _tokens(rng, sfx, cfg)])
+                      if sfx else trunk.copy())
+            new = _draw(rng, max_new_tokens)
+            new = max(1, min(new, max_total_len - len(prompt)))
+            out.append(TracedRequest(
+                arrival_s=float(t0 + rng.uniform(*gap_s)),
+                prompt=prompt, max_new_tokens=new,
+                temperature=temperature, bucket="short",
+                conv=c, parent=root, turn=1,
+            ))
+    return _sort_tree(out)

@@ -17,6 +17,7 @@ from repro.models.model import (
     logits,
     paged_layout,
     prefill,
+    prefill_suffix,
 )
 
 __all__ = [
@@ -35,4 +36,5 @@ __all__ = [
     "logits",
     "paged_layout",
     "prefill",
+    "prefill_suffix",
 ]

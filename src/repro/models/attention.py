@@ -113,6 +113,56 @@ def self_attention_prefill(
     return out, cache
 
 
+def self_attention_prefill_suffix(
+    params: Dict,
+    x: jax.Array,                    # (1, S, d) — suffix tokens only
+    cache: Dict,                     # holds valid K/V for [0, prefix_len)
+    prefix_len: jax.Array,           # (1,) int32, traced
+    cfg,
+    *,
+    is_global: bool,
+) -> Tuple[jax.Array, Dict]:
+    """Prefill a suffix on top of an already-populated cache prefix.
+
+    Prefix sharing hands admission a cache whose first ``prefix_len``
+    positions were gathered from shared pages; only the un-shared suffix is
+    projected and written (at positions ``prefix_len + i`` via a dynamic
+    slice), and its queries attend over the whole buffer with the same
+    logical-position mask ``_decode_attend`` uses — so the math matches a
+    full prefill position-for-position. Batch is 1 (serving prefill shape):
+    the write offset is per-example, so a batched version would need a
+    ragged scatter.
+    """
+    b, s, _ = x.shape
+    if b != 1:
+        raise ValueError(f"suffix prefill is batch-1 (got batch={b})")
+    positions = prefix_len[:, None] + jnp.arange(s)[None, :]   # (1, S)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    off = prefix_len[0]
+    k_buf = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, off, 0, 0))
+    v_buf = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, off, 0, 0))
+
+    l_max = k_buf.shape[1]
+    kpos = jnp.arange(l_max)[None, None, :]                    # (1, 1, L)
+    valid = kpos <= positions[:, :, None]                      # (1, S, L)
+    if not is_global and cfg.sliding_window > 0:
+        valid &= (positions[:, :, None] - kpos) < cfg.sliding_window
+    mask = valid[:, None, None, :, :]                          # (1,1,1,S,L)
+
+    scores = _grouped_scores(
+        q, k_buf.astype(x.dtype), _attn_scale(cfg), cfg.attn_softcap)
+    ctx = _attend(scores, v_buf.astype(x.dtype), mask, x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+    return out, {"k": k_buf, "v": v_buf}
+
+
 def _paged_token_write(
     pages: jax.Array,         # (P, bs, ...) physical pages; page 0 reserved/null
     new: jax.Array,           # (B, 1, ...) the new token's row per request

@@ -248,12 +248,18 @@ def _block_apply(
     enc_states: Optional[jax.Array],
     block_tables: Optional[jax.Array] = None,   # paged decode only
     active: Optional[jax.Array] = None,
+    prefix_len: Optional[jax.Array] = None,     # suffix prefill only
 ) -> Tuple[jax.Array, Optional[Dict]]:
     if kind == "shared_attn":
         bp = shared_params
         kind_eff = "attn_global"
     else:
         kind_eff = kind
+
+    if prefix_len is not None and kind_eff not in ("attn", "attn_global"):
+        raise NotImplementedError(
+            f"suffix prefill (prefix sharing) supports attention-family "
+            f"blocks only, got {kind!r}")
 
     if kind_eff in ("attn", "attn_global"):
         is_global = kind_eff == "attn_global"
@@ -266,6 +272,10 @@ def _block_apply(
         elif mode == "decode":
             a_out, new_cache = attn.self_attention_decode(
                 bp["attn"], h, cache, lengths, cfg, is_global=is_global
+            )
+        elif mode == "prefill" and prefix_len is not None:
+            a_out, new_cache = attn.self_attention_prefill_suffix(
+                bp["attn"], h, cache, prefix_len, cfg, is_global=is_global,
             )
         else:
             a_out, new_cache = attn.self_attention_prefill(
@@ -359,6 +369,7 @@ def _run_stages(
     remat: bool,
     block_tables: Optional[jax.Array] = None,
     active: Optional[jax.Array] = None,
+    prefix_len: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     shared = params.get("shared_block")
     new_stage_caches = []
@@ -373,7 +384,7 @@ def _run_stages(
                 bc = uc[f"b{i}"] if uc is not None else None
                 carry_x, nbc = _block_apply(
                     kind, up[f"b{i}"], carry_x, cfg, mode, bc, lengths, shared,
-                    enc_states, block_tables, active,
+                    enc_states, block_tables, active, prefix_len,
                 )
                 new_uc[f"b{i}"] = nbc if nbc is not None else {}
             # keep activations batch-sharded across unit boundaries (no-op
@@ -450,6 +461,38 @@ def prefill(
     x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
     last = jnp.take_along_axis(x, (prompt_lengths - 1)[:, None, None], axis=1)[:, 0]
     return logits(params, cfg, last[:, None])[:, 0], new_cache, prompt_lengths
+
+
+def prefill_suffix(
+    params: Dict,
+    cfg: ModelConfig,
+    inputs: jax.Array,                # (1, S) suffix tokens, bucket-padded
+    cache: Dict,
+    *,
+    prefix_len: jax.Array,            # (1,) int32 — positions already cached
+    suffix_lengths: jax.Array,        # (1,) int32 — valid suffix tokens
+) -> Tuple[jax.Array, Dict, jax.Array]:
+    """Prefill only the un-shared suffix of a prompt (prefix sharing).
+
+    ``cache`` already holds valid K/V for positions ``[0, prefix_len)`` —
+    gathered from shared pages by the serving pool. The suffix is processed
+    at positions ``prefix_len + i`` and written into the cache there; the
+    returned logits are the last valid suffix token's, i.e. the same
+    first-token logits a full prefill of the whole prompt would produce.
+    Attention-family configs only (KV-cache semantics); other block kinds
+    raise loudly at trace time."""
+    b = inputs.shape[0]
+    if b != 1:
+        raise ValueError(f"suffix prefill is batch-1 (got batch={b})")
+    x = _embed_inputs(params, cfg, inputs)
+    x, new_cache = _run_stages(
+        params, cfg, x, "prefill", cache, None, None, False,
+        prefix_len=prefix_len,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    last = jnp.take_along_axis(x, (suffix_lengths - 1)[:, None, None], axis=1)[:, 0]
+    return (logits(params, cfg, last[:, None])[:, 0], new_cache,
+            prefix_len + suffix_lengths)
 
 
 def decode_step(

@@ -5,7 +5,13 @@ holding its own energy-aware clock controller on one shared wall or virtual
 timeline (trace replay with an SLO-regulated DVFS loop)."""
 from repro.core.clock import VirtualClock
 from repro.core.latency import LatencyLedger, LatencySummary, summarize_latency
-from repro.core.traces import BUCKETS, TracedRequest, generate_trace
+from repro.core.traces import (
+    BUCKETS,
+    TracedRequest,
+    generate_conversation_trace,
+    generate_fanout_trace,
+    generate_trace,
+)
 from repro.serving.autoscaler import (
     AUTOSCALERS,
     Autoscaler,
@@ -21,11 +27,13 @@ from repro.serving.events import EngineStats, EventDrivenFleet
 from repro.serving.fleet import Fleet, Replica, Scheduler
 from repro.serving.paged_cache import NULL_PAGE, BlockAllocator, TrafficCounter
 from repro.serving.pool import Pool
+from repro.serving.prefix import PrefixHit, PrefixIndex, PrefixStats
 from repro.serving.router import (
     ROUTERS,
     ArchAffinity,
     EnergyAware,
     JoinShortestQueue,
+    PrefixAffinity,
     RoundRobin,
     Router,
     make_router,
@@ -63,6 +71,12 @@ __all__ = [
     "BUCKETS",
     "TracedRequest",
     "generate_trace",
+    "generate_conversation_trace",
+    "generate_fanout_trace",
+    # prefix sharing
+    "PrefixIndex",
+    "PrefixHit",
+    "PrefixStats",
     # spec layer
     "CLOCK_MODES",
     "PoolSpec",
@@ -77,6 +91,7 @@ __all__ = [
     "RoundRobin",
     "EnergyAware",
     "ArchAffinity",
+    "PrefixAffinity",
     "make_router",
     # autoscaling
     "Autoscaler",

@@ -52,6 +52,7 @@ class ServingEngine:
         paged: bool = False,
         kv_block_size: int = 16,
         kv_blocks: Optional[int] = None,
+        prefix_sharing: bool = False,
     ):
         self.cfg = cfg
         self.params = params
@@ -64,6 +65,7 @@ class ServingEngine:
             cfg, params, role="mixed", max_batch=max_batch,
             max_seq_len=max_seq_len, rng_seed=rng_seed, clock=clock,
             paged=paged, kv_block_size=kv_block_size, kv_blocks=kv_blocks,
+            prefix_sharing=prefix_sharing,
         )
         self.controller = controller
         self.waiting: Deque[Request] = deque()
@@ -106,6 +108,7 @@ class ServingEngine:
             paged=spec.decode.paged,
             kv_block_size=spec.decode.kv_block_size,
             kv_blocks=spec.decode.kv_blocks,
+            prefix_sharing=spec.decode.prefix_sharing,
         )
 
     # ------------------------------------------------------------------ api
@@ -142,8 +145,10 @@ class ServingEngine:
         while self.waiting and self.pool.can_admit(self.waiting[0]):
             req = validated_head()
             popleft(self.waiting)
-            first, cache1 = self.pool.prefill_request(req)
-            self.pool.place(req, cache1, first, len(req.prompt))
+            # colocated engine: the one pool is donor and target alike
+            hit = self.pool.prefix_acquire(req)
+            first, cache1 = self.pool.prefill_request(req, shared=hit)
+            self.pool.place(req, cache1, first, len(req.prompt), shared=hit)
             admitted.append(req)
         return admitted
 

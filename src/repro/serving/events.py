@@ -142,6 +142,14 @@ class EngineStats:
     pad_waste: int = 0                 # inert pad slots across fused calls
     pool_jit_dispatches: int = 0       # serial dispatches made by the pools
                                        # (prefill + scatter + serial decode)
+    # prefix-sharing counters (pool lifetime, summed over decode pools at
+    # run() end — all-zero on fleets with sharing off; the full breakdown
+    # rides in ``prefix_stats``)
+    prefix_hits: int = 0
+    prefix_shared_blocks: int = 0
+    prefix_cow_splits: int = 0
+    saved_prefill_j: float = 0.0
+    prefix_stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def jit_dispatches(self) -> int:
@@ -414,6 +422,12 @@ class EventDrivenFleet:
             st.pool_jit_dispatches = sum(
                 p.jit_dispatches for r in fleet.replicas
                 for p in (r.prefill_pool, r.decode_pool)) - base_dispatch
+            ps = fleet.prefix_stats_total()
+            st.prefix_hits = ps.hits
+            st.prefix_shared_blocks = ps.shared_blocks
+            st.prefix_cow_splits = ps.cow_splits
+            st.saved_prefill_j = ps.saved_prefill_j
+            st.prefix_stats = ps.as_dict()
             fleet.last_engine_stats = st
         return done
 
@@ -478,22 +492,38 @@ class EventDrivenFleet:
                 return False
             if dp.paged:
                 need = dp.allocator.blocks_for_tokens(len(req.prompt) + 1)
-                held = sum(dp.allocator.blocks_for_tokens(len(q.prompt) + 1)
-                           for _, q, _, _ in pend)
-                return dp.allocator.can_alloc(need + held)
+                extra = 0
+                if dp._prefix is not None:
+                    # shared entries the candidate would reuse need no fresh
+                    # blocks; index pages NOT reused stay reclaimable. The
+                    # pending rows' held stays the conservative full need
+                    # (their hits are already acquired, so double-counting
+                    # is impossible — just pessimistic)
+                    entries, _ = dp._peek_fitted(req.prompt)
+                    need = max(need - entries, 0)
+                    extra = max(dp._prefix.reclaimable_blocks() - entries, 0)
+                held = sum(dp.allocator.blocks_for_tokens(len(e[1].prompt) + 1)
+                           for e in pend)
+                return need + held <= dp.allocator.free_blocks + extra
             return True
 
         if collect is None:
             def admit(req: Request) -> None:
-                first, cache1 = pp.prefill_request(req)
+                hit = dp.prefix_acquire(req)
+                first, cache1 = pp.prefill_request(req, shared=hit, donor=dp)
                 pend.append([pp.clock.now_s, req, cache1, first])
                 st.prefills += 1
                 st.serial_prefill_calls += 1
         else:
             def admit(req: Request) -> None:
+                # acquire NOW (tick order fixes capacity + stats order);
+                # the dispatch itself is deferred to the fused phase. The
+                # hit travels with the job — placement re-finds it via the
+                # pool's own _pending_hits stash
+                hit = dp.prefix_acquire(req)
                 entry: List[Any] = [None, req, None, None]
                 pend.append(entry)
-                collect.append((pp, req, entry))
+                collect.append((pp, req, entry, hit, dp))
 
         admitted = r.scheduler.tick(r.waiting, pp, dp,
                                     admit=admit, gate=gate, accrue=accrue)
@@ -528,7 +558,7 @@ class EventDrivenFleet:
         if not self.fuse_prefill:
             self._admit_finish(r, self._admit_tick(r, t, accrue=accrue))
             return
-        jobs: List[Tuple[Pool, Request, List[Any]]] = []
+        jobs: List[Tuple[Pool, Request, List[Any], Any, Pool]] = []
         info = self._admit_tick(r, t, accrue=accrue, collect=jobs)
         if jobs:
             self._prefill_fused(jobs)
@@ -544,7 +574,7 @@ class EventDrivenFleet:
         (spin admits, decode events) happens in the finish phase in the
         same per-replica order the serial engine uses."""
         fleet = self.fleet
-        jobs: List[Tuple[Pool, Request, List[Any]]] = []
+        jobs: List[Tuple[Pool, Request, List[Any], Any, Pool]] = []
         infos: List[Tuple["Replica", Optional[Dict[str, Any]]]] = []
         for name, accrue in batch:
             self._admit_sched[name] -= 1
@@ -557,7 +587,7 @@ class EventDrivenFleet:
             self._admit_finish(r, info)
             self._after_admit(r)
 
-    def _prefill_fused(self, jobs: List[Tuple[Pool, Request, List[Any]]]):
+    def _prefill_fused(self, jobs: List[Tuple[Pool, Request, List[Any], Any, Pool]]):
         """Run every deferred admission prefill in grouped jitted dispatches
         and fill the pending-placement placeholders. Grouping is by
         (config, params, max_seq_len, prompt bucket); group sizes chunk at
@@ -565,11 +595,18 @@ class EventDrivenFleet:
         of the group's first prompt (results discarded), so the program
         cache stays O(log fleet) on drifting group sizes. The per-request
         accounting replays afterwards IN JOB ORDER — each pool sees its
-        admissions in exactly the serial sequence."""
+        admissions in exactly the serial sequence.
+
+        Prefix-hit jobs never join a fused group: a suffix prefill gathers
+        from its donor's live paged cache, which the NEXT hit in the same
+        batch may extend — so each one dispatches individually (counted
+        serial) and only its accounting replays at its job-order slot."""
         st = self.stats
         groups: Dict[Tuple[Any, ...], List[Tuple[Pool, Any, Any, int, List[Any]]]] = {}
         order: List[Tuple[Any, ...]] = []
-        for pp, req, entry in jobs:
+        for pp, req, entry, hit, dp in jobs:
+            if hit is not None:
+                continue
             toks, true_len, bucket = pp.prefill_tokens(req)
             sig = (pp.cfg, id(pp.params), pp.max_seq_len, bucket)
             g = groups.get(sig)
@@ -583,14 +620,18 @@ class EventDrivenFleet:
             for i in range(0, len(items), self.max_fused_group):
                 self._prefill_fused_chunk(sig, items[i:i + self.max_fused_group],
                                           results)
-        for pp, req, entry in jobs:
-            first, cache1 = pp.prefill_request(
-                req, precomputed=results[id(entry)])
+        for pp, req, entry, hit, dp in jobs:
+            if hit is not None:
+                first, cache1 = pp.prefill_request(req, shared=hit, donor=dp)
+                st.serial_prefill_calls += 1
+            else:
+                first, cache1 = pp.prefill_request(
+                    req, precomputed=results[id(entry)])
+                st.fused_prefill_reqs += 1
             entry[0] = pp.clock.now_s
             entry[2] = cache1
             entry[3] = first
             st.prefills += 1
-            st.fused_prefill_reqs += 1
 
     def _prefill_fused_chunk(self, sig, items, results: Dict[int, Any]):
         """One fused prefill dispatch: K (pow2-padded) independent batch-1

@@ -63,6 +63,7 @@ from repro.serving.controller import ClockController
 from repro.serving.pool import (
     PhaseStats,
     Pool,
+    PrefixStats,
     Request,
     acquire_request,
     head_validator,
@@ -121,9 +122,16 @@ class Scheduler:
             gate = decode_pool.can_admit
         if admit is None:
             def admit(req: Request) -> None:
-                first, cache1 = prefill_pool.prefill_request(req)
+                # prefix sharing: pin any shared-prefix hit on the decode
+                # pool first, prefill only the un-shared suffix (gathered
+                # from the donor's pages), and place with the shared table
+                # entries. With sharing off the hit is None and this is the
+                # legacy handoff, byte for byte.
+                hit = decode_pool.prefix_acquire(req)
+                first, cache1 = prefill_pool.prefill_request(
+                    req, shared=hit, donor=decode_pool)
                 decode_pool.place(
-                    req, cache1, first, len(req.prompt),
+                    req, cache1, first, len(req.prompt), shared=hit,
                     # with split pool clocks the first token exists when the
                     # PREFILL timeline produced it; on a shared clock this
                     # is exactly the legacy stamp
@@ -140,12 +148,15 @@ class Scheduler:
             # asks the block allocator, not a fixed slot count.
             self._credit = min(
                 self._credit + self.chunk_tokens,
-                max(float(self.chunk_tokens), float(len(head.prompt))),
+                max(float(self.chunk_tokens),
+                    float(decode_pool.prefill_cost_tokens(head))),
             )
         admitted: List[Request] = []
         while waiting and gate(waiting[0]):
             req = validated_head()
-            need = len(req.prompt)
+            # charge the tokens prefill will actually compute — the suffix
+            # only, under a prefix hit (identical to len(prompt) otherwise)
+            need = decode_pool.prefill_cost_tokens(req)
             if need > self._credit:
                 break
             popleft(waiting)
@@ -177,6 +188,7 @@ class Replica:
         paged: bool = False,
         kv_block_size: int = 16,
         kv_blocks: Optional[int] = None,
+        prefix_sharing: bool = False,
     ):
         self.cfg = cfg
         self.name = name
@@ -203,6 +215,7 @@ class Replica:
             max_seq_len=max_seq_len, rng_seed=rng_seed, clock=clock,
             meter_interval_s=meter_interval_s,
             paged=paged, kv_block_size=kv_block_size, kv_blocks=kv_blocks,
+            prefix_sharing=prefix_sharing,
         )
         self.controller = controller
         self.scheduler = Scheduler(prefill_chunk_tokens)
@@ -275,6 +288,7 @@ class Replica:
             paged=spec.decode.paged,
             kv_block_size=spec.decode.kv_block_size,
             kv_blocks=spec.decode.kv_blocks,
+            prefix_sharing=spec.decode.prefix_sharing,
         )
 
     # ------------------------------------------------------------------ api
@@ -568,16 +582,20 @@ class Fleet:
 
     # ------------------------------------------------------------------ api
     def route(self, *, prompt_len: int, max_new_tokens: int,
-              bucket: str = "mixed") -> Replica:
+              bucket: str = "mixed",
+              prompt: Optional[np.ndarray] = None) -> Replica:
         """Ask the router for this request's replica (routable ones only;
-        with everything drained, powered-up replicas are the fallback)."""
+        with everything drained, powered-up replicas are the fallback).
+        ``prompt`` carries the token ids for content-aware policies (the
+        prefix router scores candidates by shared-prefix coverage)."""
         candidates = [r for r in self.replicas if r.routable()]
         if not candidates:
             candidates = [r for r in self.replicas if r.powered]
         if not candidates:
             raise RuntimeError("no powered replica to route to — power_up first")
         return self.router.route(candidates, prompt_len=prompt_len,
-                                 max_new_tokens=max_new_tokens, bucket=bucket)
+                                 max_new_tokens=max_new_tokens, bucket=bucket,
+                                 prompt=prompt)
 
     def submit(
         self,
@@ -594,7 +612,8 @@ class Fleet:
         prompt = np.asarray(prompt, np.int32)
         self.arrivals_total += 1
         replica = self.route(prompt_len=len(prompt),
-                             max_new_tokens=max_new_tokens, bucket=bucket)
+                             max_new_tokens=max_new_tokens, bucket=bucket,
+                             prompt=prompt)
         return replica.submit(prompt, max_new_tokens, temperature=temperature,
                               eos_token_id=eos_token_id, arrival_s=arrival_s,
                               bucket=bucket)
@@ -962,3 +981,11 @@ class Fleet:
 
     def stats_by_replica(self) -> Dict[str, PhaseStats]:
         return {r.name: r.stats for r in self.replicas}
+
+    def prefix_stats_total(self) -> PrefixStats:
+        """Fleet-wide prefix-sharing counters (decode pools own the index;
+        all-zero on fleets with sharing off)."""
+        total = PrefixStats()
+        for r in self.replicas:
+            total.merge(r.decode_pool.prefix_stats)
+        return total

@@ -76,10 +76,18 @@ from repro.models import (
     kv_cache_bytes_per_token,
     paged_layout,
     prefill,
+    prefill_suffix,
     recurrent_state_bytes,
 )
 from repro.models.config import ModelConfig
 from repro.serving.paged_cache import NULL_PAGE, BlockAllocator, TrafficCounter
+from repro.serving.prefix import PrefixHit, PrefixIndex, PrefixStats
+
+# Attention paradigms whose KV rows depend only on their own prefix — the
+# precondition for sharing cached pages across requests. Recurrent/MoE-state
+# blocks carry slot-indexed O(1) state that is NOT position-addressable, so
+# a pool holding any other kind refuses prefix sharing loudly.
+SHAREABLE_KINDS = ("attn", "attn_global", "shared_attn")
 
 # Back-compat default: seed code stopped on token id 0. The real stop id now
 # comes from ``ModelConfig.eos_token_id`` (per-request override on Request).
@@ -205,6 +213,9 @@ class Request:
     decode_read_bytes: int = 0             # paged pools: measured HBM traffic
     decode_write_bytes: int = 0
     preemptions: int = 0                   # times evicted + restarted
+    prefix_tokens: int = 0                 # prompt positions served from shared pages
+    saved_prefill_j: float = 0.0           # prefill joules sharing avoided (side-channel:
+                                           # NOT part of energy_j — conservation holds)
     done: bool = False
     # event ledger (arrival/admitted/first-token/finish + per-token stamps),
     # stamped by the pool on the serving clock — wall or virtual alike
@@ -274,6 +285,8 @@ def release_request(req: Request) -> None:
     req.prefill_j = req.decode_j = 0.0
     req.decode_read_bytes = req.decode_write_bytes = 0
     req.preemptions = 0
+    req.prefix_tokens = 0
+    req.saved_prefill_j = 0.0
     req.done = False
     req.ledger.reset()
     _REQUEST_FREELIST.append(req)
@@ -415,6 +428,7 @@ class Pool:
         paged: bool = False,
         kv_block_size: int = 16,
         kv_blocks: Optional[int] = None,   # default: dense-equivalent budget
+        prefix_sharing: bool = False,
     ):
         self.cfg = cfg
         self.params = params
@@ -481,6 +495,25 @@ class Pool:
             self._state_read_bytes = recurrent_state_bytes(cfg)
             self._state_write_bytes = recurrent_state_bytes(cfg, mutable_only=True)
             self._weight_bytes = weight_stream_bytes(cfg)
+        # prefix sharing (repro.serving.prefix): the index holds refcounted
+        # page references on THIS pool's allocator; ``prefix_acquire`` hands
+        # shared table entries to admitted requests, and ``prefix_stats``
+        # meters what the reuse avoided (side-channel, never added to totals)
+        self.prefix_sharing = prefix_sharing
+        self._prefix: Optional[PrefixIndex] = None
+        self.prefix_stats = PrefixStats()
+        self._pending_hits: Dict[int, PrefixHit] = {}
+        if prefix_sharing:
+            if not paged:
+                raise ValueError("prefix_sharing requires paged=True")
+            bad = sorted(set(k for k in cfg.block_kinds_flat()
+                             if k not in SHAREABLE_KINDS))
+            if bad:
+                raise ValueError(
+                    f"prefix_sharing supports attention-family blocks only "
+                    f"({'/'.join(SHAREABLE_KINDS)}); config has {bad}"
+                )
+            self._prefix = PrefixIndex(self.allocator)
         self._host_lengths = np.zeros(max_batch, np.int64)
         self._admit_seq = np.zeros(max_batch, np.int64)
         self._admit_counter = 0
@@ -539,6 +572,52 @@ class Pool:
             return jax.tree.map(scat, big_cache, small_cache, layout)
 
         return scatter_paged_impl
+
+    def _make_prefill_shared_impl(self):
+        """Suffix-only prefill over a shared prefix: gather the hit's pages
+        out of THIS pool's paged cache into a dense batch-1 row (null-page
+        padding absorbs the unused entries; garbage rows sit above
+        ``prefix_len`` where the causal mask never looks), then run
+        ``prefill_suffix`` for just the un-shared tokens."""
+        nb = self.block_tables.shape[1]
+        bs = self.kv_block_size
+        cfg = self.cfg
+        max_seq_len = self.max_seq_len
+        layout = self._layout
+
+        def prefill_shared_impl(params, pages, page_map, toks, prefix_len,
+                                true_len):
+            cache1 = init_cache(cfg, 1, max_seq_len)
+
+            def fill(c1, pg, is_paged):
+                if not is_paged:
+                    return c1
+                rows = pg[:, page_map]              # (n_units, nb, bs, ...)
+                rows = rows.reshape(rows.shape[0], nb * bs, *rows.shape[3:])
+                return c1.at[:, 0].set(rows.astype(c1.dtype))
+
+            cache1 = jax.tree.map(fill, cache1, pages, layout)
+            logits, cache1, _ = prefill_suffix(
+                params, cfg, toks, cache1,
+                prefix_len=prefix_len, suffix_lengths=true_len,
+            )
+            return logits, cache1
+
+        return prefill_shared_impl
+
+    def _make_copy_page_impl(self):
+        """The COW split's physical copy: duplicate one page across every
+        paged cache leaf (``dst`` must be freshly allocated, so no live
+        table can alias it)."""
+        layout = self._layout
+
+        def copy_page_impl(cache, src, dst):
+            def cp(leaf, is_paged):
+                return leaf.at[:, dst].set(leaf[:, src]) if is_paged else leaf
+
+            return jax.tree.map(cp, cache, layout)
+
+        return copy_page_impl
 
     @staticmethod
     def _sample(logits, key, temperature):
@@ -649,12 +728,22 @@ class Pool:
     def can_admit(self, req: Request) -> bool:
         """Admission test: a slot AND (paged) blocks for prompt + first
         token. Growth past that is served by alloc-or-preempt, so this is
-        the continuous-batching gate: admit whenever blocks are free."""
+        the continuous-batching gate: admit whenever blocks are free.
+
+        A prefix-sharing pool admits on *private* need — shared table
+        entries cost nothing — and may count index-only pages it could
+        evict; the count excludes the hit's own pages, which acquisition
+        pins (refcount 2) and so makes unreclaimable."""
         if not self.has_free_slot():
             return False
         if not self.paged:
             return True
         need = self.allocator.blocks_for_tokens(len(req.prompt) + 1)
+        if self._prefix is not None:
+            entries, _ = self._peek_fitted(req.prompt)
+            avail = self.allocator.free_blocks + max(
+                self._prefix.reclaimable_blocks() - entries, 0)
+            return max(need - entries, 0) <= avail
         return self.allocator.can_alloc(need)
 
     def occupancy(self) -> int:
@@ -753,10 +842,187 @@ class Pool:
                 if blk is not None:
                     self.block_tables[slot, want] = blk
                     break
+                if self._evict_index_one():
+                    continue                      # index page reclaimed; retry
                 victim = self._youngest_active_slot()
                 self._evict(victim)
                 if victim == slot:
                     break                         # evicted ourselves; requeued
+
+    # ------------------------------------------------------- prefix sharing
+    def _evict_index_one(self) -> bool:
+        """Reclaim one index-only page (allocator pressure relief: tried
+        before preempting a live slot). False when sharing is off or the
+        index holds nothing reclaimable."""
+        if self._prefix is None or not self._prefix.evict_one():
+            return False
+        self.prefix_stats.evictions += 1
+        self.prefix_stats.index_blocks = self._prefix.held_blocks
+        return True
+
+    def _alloc_blocks(self, n: int, owner: int) -> List[int]:
+        """``allocator.alloc`` with index eviction under pressure — the
+        placement-time twin of ``can_admit``'s reclaimable accounting."""
+        while not self.allocator.can_alloc(n) and self._evict_index_one():
+            pass
+        return self.allocator.alloc(n, owner)
+
+    def _fit_hit(self, hit: Optional[PrefixHit],
+                 prompt_len: int) -> Optional[PrefixHit]:
+        """Cap a hit so the suffix bucket still fits the cache row:
+        ``prefix_len + bucket(suffix) <= max_seq_len`` keeps the suffix
+        write un-clamped. Demotes to fewer whole shared blocks (never a
+        partial boundary) or to a miss."""
+        if hit is None:
+            return None
+        L = prompt_len
+
+        def ok(pt: int) -> bool:
+            return pt + min(_bucket(L - pt), self.max_seq_len) <= self.max_seq_len
+
+        if ok(hit.prefix_tokens):
+            return hit
+        bs = self.kv_block_size
+        n = min(len(hit.full_blocks), (L - 1) // bs)
+        while n > 0 and not ok(n * bs):
+            n -= 1
+        if n == 0:
+            return None
+        return PrefixHit(hit.full_blocks[:n], None, n * bs, n * bs)
+
+    def _peek_fitted(self, prompt) -> Tuple[int, int]:
+        """Non-mutating (shared_entries, prefix_tokens) the prompt would
+        get after the bucket-fit cap — for admission gates, scheduler token
+        budgets and the prefix router."""
+        if self._prefix is None:
+            return 0, 0
+        entries, pt = self._prefix.peek(prompt)
+        if entries == 0:
+            return 0, 0
+        L = len(prompt)
+
+        def ok(p: int) -> bool:
+            return p + min(_bucket(L - p), self.max_seq_len) <= self.max_seq_len
+
+        if ok(pt):
+            return entries, pt
+        bs = self.kv_block_size
+        n = min(entries, (L - 1) // bs)
+        while n > 0 and not ok(n * bs):
+            n -= 1
+        return (n, n * bs) if n else (0, 0)
+
+    def prefix_acquire(self, req: Request) -> Optional[PrefixHit]:
+        """Look the prompt up in the prefix index and pin the hit: one
+        allocator reference per shared table entry, owned by ``req.uid`` —
+        the same references the block table will carry, so eviction and
+        finish free them through the normal table path. Returns None when
+        sharing is off or nothing matched. Call only on the admission path;
+        every acquired hit MUST flow into ``place(..., shared=hit)``."""
+        if self._prefix is None:
+            return None
+        self.prefix_stats.lookups += 1
+        hit = self._fit_hit(self._prefix.match(req.prompt), len(req.prompt))
+        if hit is None:
+            self.prefix_stats.misses += 1
+            return None
+        for b in hit.table_blocks:
+            self.allocator.retain(b, req.uid)
+        self._pending_hits[req.uid] = hit
+        self.prefix_stats.hits += 1
+        self.prefix_stats.shared_blocks += hit.shared_entries
+        self.prefix_stats.shared_tokens += hit.prefix_tokens
+        return hit
+
+    def prefill_cost_tokens(self, req: Request) -> int:
+        """Prompt tokens prefill will actually compute for ``req`` — the
+        scheduler's token-budget charge (suffix only under a prefix hit;
+        at least one token is always recomputed)."""
+        if self._prefix is None:
+            return len(req.prompt)
+        _, pt = self._peek_fitted(req.prompt)
+        return max(len(req.prompt) - pt, 1)
+
+    def suffix_tokens(self, req: Request,
+                      prefix_tokens: int) -> Tuple[np.ndarray, np.ndarray, int]:
+        """The (tokens, true_len, bucket) triple for a suffix-only prefill:
+        the un-shared tail of the prompt, padded to its own bucket."""
+        sl = len(req.prompt) - prefix_tokens
+        bucket = min(_bucket(sl), self.max_seq_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :sl] = req.prompt[prefix_tokens:]
+        return toks, np.asarray([sl], np.int32), bucket
+
+    def shared_prefill(self, params, toks, true_len, hit: PrefixHit):
+        """Donor-side dispatch of the gather+suffix-prefill program over
+        THIS pool's paged cache. Returns (logits, dense cache row) shaped
+        exactly like the plain prefill's, so placement is uniform."""
+        gather = hit.gather_blocks(self.kv_block_size)
+        page_map = np.full(self.block_tables.shape[1], NULL_PAGE, np.int32)
+        page_map[:len(gather)] = gather
+        fn = _cached(
+            ("prefill_shared_jit", self.cfg, self.max_seq_len,
+             self.block_tables.shape[1], self.kv_block_size),
+            lambda: jax.jit(self._make_prefill_shared_impl()))
+        prefix_len = np.asarray([hit.prefix_tokens], np.int32)
+        return fn(params, self.cache, page_map, toks, prefix_len, true_len)
+
+    def _register_finished(self, req: Request, slot: int):
+        """Donate a finished request's cached transcript to the prefix
+        index (prompt + all generated tokens whose KV was written). Runs
+        BEFORE the request's blocks are freed, so the pages the index newly
+        retains survive the free."""
+        cached_len = int(self._host_lengths[slot])
+        if cached_len < self.kv_block_size:
+            return
+        toks = np.concatenate([
+            np.asarray(req.prompt, np.int64),
+            np.asarray(req.output[:-1], np.int64),
+        ])[:cached_len]
+        self._prefix.register(toks, self._slot_blocks(slot), cached_len)
+        self.prefix_stats.registrations += 1
+        self.prefix_stats.index_blocks = self._prefix.held_blocks
+
+    def _cow_guard(self):
+        """Copy-on-write: before a decode step, any live slot whose write
+        target page is shared (refcount > 1) gets a private copy — alloc a
+        fresh page (evicting index entries, then preempting the youngest
+        slot, under pressure), duplicate the page in one jitted copy, swap
+        the table entry, drop the shared reference. Shared pages are
+        thereby never written."""
+        bs = self.kv_block_size
+        block_bytes = bs * self._kv_token_bytes
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            entry = int(self._host_lengths[slot]) // bs
+            blk = int(self.block_tables[slot, entry])
+            if blk == NULL_PAGE or not self.allocator.is_shared(blk):
+                continue
+            while True:
+                fresh = self.allocator.alloc_one(owner=req.uid)
+                if fresh is not None:
+                    break
+                if self._evict_index_one():
+                    continue
+                victim = self._youngest_active_slot()
+                self._evict(victim)
+                if victim == slot:
+                    break
+            if self.slot_req[slot] is None:       # preempted ourselves
+                continue
+            copy_fn = _cached(
+                ("copy_page_jit", self.cfg, self.kv_block_size),
+                lambda: jax.jit(self._make_copy_page_impl(),
+                                donate_argnums=(0,)))
+            self.cache = copy_fn(self.cache, blk, fresh)
+            self.jit_dispatches += 1
+            self.block_tables[slot, entry] = fresh
+            self.allocator.release(blk, owner=req.uid)
+            self.prefix_stats.cow_splits += 1
+            # the split physically moves one block through HBM
+            self.traffic.count_reads(1, block_bytes)
+            self.traffic.count_writes(1, block_bytes)
 
     # ------------------------------------------------------------ phase work
     def prefill_tokens(self, req: Request) -> Tuple[np.ndarray, np.ndarray, int]:
@@ -770,7 +1036,9 @@ class Pool:
         return toks, np.asarray([l], np.int32), bucket
 
     def prefill_request(self, req: Request, *,
-                        precomputed: Optional[Tuple[Any, Any]] = None) -> Tuple[int, Any]:
+                        precomputed: Optional[Tuple[Any, Any]] = None,
+                        shared: Optional[PrefixHit] = None,
+                        donor: Optional["Pool"] = None) -> Tuple[int, Any]:
         """Run the bucketed batch-1 prefill; returns (first_token, cache row).
 
         The returned cache row is placed with ``place`` — on this pool for the
@@ -781,18 +1049,32 @@ class Pool:
         call is skipped — clock advance, gauge bracketing, ledger stamps,
         RNG-split order and energy accounting run exactly as the serial
         path, so fused admission stays byte-identical per request.
+
+        ``shared`` (a hit from ``donor.prefix_acquire``, donor defaulting to
+        this pool) switches to suffix-only prefill: compute, time, and
+        joules scale to the un-shared tokens, and the avoided prefill is
+        banked in the donor's ``prefix_stats.saved_*`` side-channel — never
+        added to any energy total, so conservation is untouched.
         """
         l = len(req.prompt)
+        work = l if shared is None else l - shared.prefix_tokens
         self._in_phase_call = True
         self._refresh_gauge()
         t0 = self.clock()
         req.ledger.mark_admitted(t0)
         try:
             if precomputed is None:
-                toks, true_len, bucket = self.prefill_tokens(req)
-                logits, cache1 = self._jit_prefill(
-                    self.params, toks, true_len, bucket=bucket
-                )
+                if shared is not None:
+                    dp = donor if donor is not None else self
+                    toks, true_len, _ = self.suffix_tokens(
+                        req, shared.prefix_tokens)
+                    logits, cache1 = dp.shared_prefill(
+                        self.params, toks, true_len, shared)
+                else:
+                    toks, true_len, bucket = self.prefill_tokens(req)
+                    logits, cache1 = self._jit_prefill(
+                        self.params, toks, true_len, bucket=bucket
+                    )
                 self.jit_dispatches += 1
             else:
                 logits, cache1 = precomputed
@@ -807,17 +1089,26 @@ class Pool:
             jax.block_until_ready(logits)
             if self.virtual and self.prefill_op is not None:
                 # modelled prefill duration: the operating point's profile
-                # is per prefill_seq tokens — scale to this prompt's length
+                # is per prefill_seq tokens — scale to the tokens actually
+                # computed (the suffix only, under a prefix hit)
                 prof = self.prefill_op.profile
-                self.advance_time(prof.t_total * l / max(prof.tokens, 1))
+                self.advance_time(prof.t_total * work / max(prof.tokens, 1))
         finally:
             dt = self.clock() - t0
             self._in_phase_call = False
             self._refresh_gauge()
-        joules = self._mj_per_token("prefill") * l / 1e3
-        self.stats.merge_prefill(l, dt, joules)
+        mj = self._mj_per_token("prefill")
+        joules = mj * work / 1e3
+        self.stats.merge_prefill(work, dt, joules)
         req.prefill_s += dt
         req.prefill_j += joules
+        if shared is not None:
+            dp = donor if donor is not None else self
+            saved_j = mj * shared.prefix_tokens / 1e3
+            req.prefix_tokens = shared.prefix_tokens
+            req.saved_prefill_j += saved_j
+            dp.prefix_stats.saved_prefill_tokens += shared.prefix_tokens
+            dp.prefix_stats.saved_prefill_j += saved_j
         return first, cache1
 
     def _place_bookkeeping(self, req: Request, first_token: int, length: int,
@@ -845,7 +1136,8 @@ class Pool:
         return slot
 
     def place(self, req: Request, cache1: Any, first_token: int, length: int,
-              *, first_token_s: Optional[float] = None) -> int:
+              *, first_token_s: Optional[float] = None,
+              shared: Optional[PrefixHit] = None) -> int:
         """Scatter a filled batch-1 cache row into a free slot (migration).
 
         Paged pools allocate the request's block table first and scatter by
@@ -853,22 +1145,44 @@ class Pool:
         the table row. ``first_token_s`` overrides the first-token stamp:
         with per-pool clocks the prefill timeline produced the token at its
         own (earlier) time, and the event engine may place the row after
-        the decode timeline has moved past it."""
+        the decode timeline has moved past it.
+
+        With ``shared`` (the hit ``prefix_acquire`` pinned for this
+        request), the leading table entries are the hit's pages — already
+        referenced by ``req.uid``, so nothing is allocated or copied for
+        them: the scatter is masked to the null page there, and the bytes
+        the migration avoided are banked in ``prefix_stats``."""
         slot = self._place_bookkeeping(req, first_token, length, first_token_s)
         if self.paged:
+            if shared is None and self._prefix is not None:
+                # batched placement paths (place_many) don't thread the
+                # hit — re-find the one prefix_acquire pinned for this uid
+                shared = self._pending_hits.get(req.uid)
             need = self.allocator.blocks_for_tokens(length + 1)
-            blocks = self.allocator.alloc(need, owner=req.uid)
+            se = shared.shared_entries if shared is not None else 0
+            blocks = self._alloc_blocks(need - se, owner=req.uid)
             page_map = np.full(self.block_tables.shape[1], NULL_PAGE, np.int32)
-            page_map[:need] = blocks
+            if se:
+                page_map[:se] = shared.table_blocks
+            page_map[se:need] = blocks
             self.block_tables[slot] = page_map
+            scatter_map = page_map.copy()
+            if se:
+                scatter_map[:se] = NULL_PAGE      # shared pages: never written
+                self._pending_hits.pop(req.uid, None)
             self.cache = self._jit_scatter_paged(
-                self.cache, cache1, jnp.asarray(page_map), slot
+                self.cache, cache1, jnp.asarray(scatter_map), slot
             )
-            # copy-on-migrate moves `need` whole blocks of KV into the pool
+            # copy-on-migrate moves the PRIVATE blocks of KV into the pool;
+            # shared entries move nothing (the avoided bytes are metered)
+            npriv = need - se
             self.traffic.count_writes(
-                need, need * self.kv_block_size * self._kv_token_bytes
+                npriv, npriv * self.kv_block_size * self._kv_token_bytes
                 + self._state_write_bytes,
             )
+            if se:
+                self.prefix_stats.saved_migrate_bytes += (
+                    se * self.kv_block_size * self._kv_token_bytes)
         else:
             self.cache = self._jit_scatter(self.cache, cache1, slot)
         self.jit_dispatches += 1
@@ -916,6 +1230,8 @@ class Pool:
         streams are independent of how steps are grouped)."""
         if self.paged and any(r is not None for r in self.slot_req):
             self._grow_tables()
+            if self._prefix is not None:
+                self._cow_guard()
         active = self.active_mask()
         if not active.any():
             return None
@@ -1019,6 +1335,10 @@ class Pool:
                 self.slot_req[i] = None
                 self._slot_temp[i] = 0.0
                 if self.paged:
+                    if self._prefix is not None:
+                        # donate the transcript to the index BEFORE freeing:
+                        # newly-retained pages survive the request's free
+                        self._register_finished(req, i)
                     self.allocator.free(self._slot_blocks(i), owner=req.uid)
                     self.block_tables[i] = NULL_PAGE
                     self._host_lengths[i] = 0
@@ -1034,6 +1354,14 @@ class Pool:
         if not self.paged or self.cache is None:
             return
         mapping = self.allocator.defrag()
+        if self._prefix is not None:
+            # every held page is live, so it appears in the mapping; each
+            # trie entry (and stashed hit) is rewritten exactly once
+            self._prefix.remap(mapping)
+            for hit in self._pending_hits.values():
+                hit.full_blocks = [mapping[b] for b in hit.full_blocks]
+                if hit.tail_block is not None:
+                    hit.tail_block = mapping[hit.tail_block]
         remap = np.arange(self.allocator.num_blocks + 1)
         for old, new in mapping.items():
             remap[old] = new

@@ -49,8 +49,11 @@ class Router(Protocol):
     name: str
 
     def route(self, candidates: Sequence["Replica"], *, prompt_len: int,
-              max_new_tokens: int, bucket: str = "mixed") -> "Replica":
-        """Return one of ``candidates`` (never empty; fleet order)."""
+              max_new_tokens: int, bucket: str = "mixed",
+              prompt=None) -> "Replica":
+        """Return one of ``candidates`` (never empty; fleet order).
+        ``prompt`` (token ids, may be None) feeds content-aware policies;
+        length/bucket-only policies ignore it."""
         ...
 
 
@@ -76,7 +79,7 @@ class JoinShortestQueue:
     name = "jsq"
 
     def route(self, candidates, *, prompt_len, max_new_tokens,
-              bucket="mixed"):
+              bucket="mixed", prompt=None):
         return _jsq_pick(prefer_warm(candidates))
 
 
@@ -95,7 +98,7 @@ class RoundRobin:
         self._next = 0
 
     def route(self, candidates, *, prompt_len, max_new_tokens,
-              bucket="mixed"):
+              bucket="mixed", prompt=None):
         cands = prefer_warm(candidates)
         pick = cands[self._next % len(cands)]
         self._next += 1
@@ -135,7 +138,7 @@ class EnergyAware:
                 + max_new_tokens * dec.profile.energy_per_token_mj)
 
     def route(self, candidates, *, prompt_len, max_new_tokens,
-              bucket="mixed"):
+              bucket="mixed", prompt=None):
         candidates = prefer_warm(candidates)
         if any(r.controller is None for r in candidates):
             return _jsq_pick(candidates)        # nothing to price with
@@ -182,7 +185,7 @@ class ArchAffinity:
         )
 
     def route(self, candidates, *, prompt_len, max_new_tokens,
-              bucket="mixed"):
+              bucket="mixed", prompt=None):
         candidates = prefer_warm(candidates)
         if bucket not in ("short", "long") or \
                 any(r.controller is None for r in candidates):
@@ -194,11 +197,43 @@ class ArchAffinity:
         return _jsq_pick(candidates)
 
 
+class PrefixAffinity:
+    """Shared-prefix locality: send a request to the replica already
+    holding its longest cached prefix.
+
+    Conversation-tree workloads (multi-turn chat, agentic fan-out) reuse a
+    trunk of tokens across requests; a prefix-sharing decode pool
+    (``PoolSpec.prefix_sharing``) can serve those positions from cached
+    pages — but only on the replica that holds them. Candidates are scored
+    by ``Pool._peek_fitted`` (non-mutating: no LRU touch, no stats), and
+    the best coverage wins when it spans at least one block; ties break on
+    queue depth then fleet order, and no meaningful coverage anywhere —
+    including fleets with sharing off, where every peek is 0 — degrades to
+    JSQ. Deterministic: a pure function of index contents and queue state.
+    """
+
+    name = "prefix"
+
+    def route(self, candidates, *, prompt_len, max_new_tokens,
+              bucket="mixed", prompt=None):
+        candidates = prefer_warm(candidates)
+        if prompt is None:
+            return _jsq_pick(candidates)
+        scored = [(r.decode_pool._peek_fitted(prompt)[1], r)
+                  for r in candidates]
+        best = max(t for t, _ in scored)
+        if best < max(r.decode_pool.kv_block_size for r in candidates):
+            return _jsq_pick(candidates)
+        leaders = [r for t, r in scored if t == best]
+        return _jsq_pick(leaders)
+
+
 ROUTERS = {
     JoinShortestQueue.name: JoinShortestQueue,
     RoundRobin.name: RoundRobin,
     EnergyAware.name: EnergyAware,
     ArchAffinity.name: ArchAffinity,
+    PrefixAffinity.name: PrefixAffinity,
 }
 
 

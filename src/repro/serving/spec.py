@@ -46,6 +46,10 @@ class PoolSpec:
     paged: bool = False
     kv_block_size: int = 16
     kv_blocks: Optional[int] = None     # None -> dense-equivalent budget
+    # copy-on-write prefix sharing (repro.serving.prefix): decode pools
+    # only, requires paged — default off so existing specs replay
+    # byte-identically
+    prefix_sharing: bool = False
 
     def __post_init__(self):
         _require(self.batch >= 1, f"PoolSpec.batch must be >= 1, got {self.batch}")
@@ -53,6 +57,8 @@ class PoolSpec:
                  f"PoolSpec.kv_block_size must be >= 1, got {self.kv_block_size}")
         _require(self.kv_blocks is None or self.kv_blocks >= 1,
                  f"PoolSpec.kv_blocks must be >= 1 or None, got {self.kv_blocks}")
+        _require(not self.prefix_sharing or self.paged,
+                 "PoolSpec.prefix_sharing requires paged=True")
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "PoolSpec":

@@ -83,9 +83,81 @@ class TestAllocatorProperties:
             assert all(1 <= b <= num_blocks for b in live), "null/oob page leaked"
             assert alloc.free_blocks + len(live) == num_blocks
             assert alloc.used_blocks == len(live)
+            alloc.assert_invariants()
         for owner, blocks in list(held.items()):
             alloc.free(blocks, owner)
         assert alloc.free_blocks == num_blocks, "free did not return all blocks"
+        alloc.assert_invariants()
+
+    def test_zero_size_edges(self):
+        """alloc(0) and blocks_for_tokens(0) are well-defined no-ops."""
+        alloc = BlockAllocator(4, 8)
+        assert alloc.alloc(0, owner=1) == []
+        assert alloc.blocks_for_tokens(0) == 0
+        assert alloc.free_blocks == 4 and alloc.used_blocks == 0
+        alloc.assert_invariants()
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        num_blocks=st.integers(min_value=2, max_value=32),
+        seed=st.integers(min_value=0, max_value=10_000),
+    )
+    def test_retain_release_sharing_traffic(self, num_blocks, seed):
+        """Random retain/release interleavings on top of alloc/free: the
+        refcount ledger balances at every step, a page dies only when its
+        last reference goes, and draining everything empties the pool."""
+        rng = np.random.default_rng(seed)
+        alloc = BlockAllocator(num_blocks, block_size=8)
+        refs = []                               # (block, owner) one per ref
+        uid = 0
+        for _ in range(120):
+            r = rng.random()
+            if refs and r < 0.35:
+                i = int(rng.integers(len(refs)))
+                block, owner = refs.pop(i)
+                alloc.release(block, owner)
+            elif refs and r < 0.6:
+                block, _ = refs[int(rng.integers(len(refs)))]
+                uid += 1
+                alloc.retain(block, uid)
+                refs.append((block, uid))
+            else:
+                uid += 1
+                got = alloc.alloc_one(uid)
+                if got is None:
+                    assert alloc.free_blocks == 0
+                else:
+                    refs.append((got, uid))
+            alloc.assert_invariants()
+            live = {b for b, _ in refs}
+            assert alloc.used_blocks == len(live)
+            for b in live:
+                assert alloc.refcount(b) == sum(1 for bb, _ in refs if bb == b)
+                assert alloc.is_shared(b) == (alloc.refcount(b) > 1)
+        for block, owner in refs:
+            alloc.release(block, owner)
+        alloc.assert_invariants()
+        assert alloc.used_blocks == 0
+        with pytest.raises(ValueError, match="retain of unallocated"):
+            alloc.retain(1, owner=0)
+
+    def test_defrag_remaps_shared_blocks_once(self):
+        """A defrag mapping names each live page exactly once, shared or
+        not, and every co-owner of a shared page survives on the new id."""
+        alloc = BlockAllocator(8, 8)
+        a = alloc.alloc(3, owner=1)             # ids 1..3
+        b = alloc.alloc(2, owner=2)             # ids 4..5
+        alloc.retain(a[2], owner=2)             # a[2] shared by 1 and 2
+        alloc.free([a[0]], 1)                   # fragment the id space
+        alloc.free([b[0]], 2)
+        mapping = alloc.defrag()
+        assert sorted(mapping) == sorted([a[1], a[2], b[1]])
+        assert sorted(mapping.values()) == [1, 2, 3]
+        assert len([old for old in mapping if old == a[2]]) == 1
+        shared_new = mapping[a[2]]
+        assert alloc.refcount(shared_new) == 2
+        assert sorted(alloc.owners(shared_new)) == [1, 2]
+        alloc.assert_invariants()
 
     def test_double_free_and_wrong_owner_raise(self):
         alloc = BlockAllocator(4, 8)
@@ -290,6 +362,98 @@ class TestPagedDenseEquivalence:
         assert sum(r.preemptions for r in rp) > 0
         for a, b in zip(rd, rp):
             assert a.output == b.output
+
+
+# --------------------------------------------- prefix sharing == dense/paged
+class TestPrefixCowEquivalence:
+    @staticmethod
+    def _run_waves(eng, waves, max_new=6):
+        outs = []
+        for wave in waves:
+            reqs = [eng.submit(p, max_new_tokens=max_new) for p in wave]
+            eng.run_to_completion(max_steps=4000)
+            assert all(r.done for r in reqs)
+            outs.append([r.output for r in reqs])
+        return outs
+
+    @staticmethod
+    def _trunk_waves(cfg, seed):
+        """Wave 1 seeds the index (registration happens at finish); wave 2
+        reuses the trunk with random suffixes — 0-length suffix is an exact
+        fork, which must COW-split the shared tail on first decode write."""
+        rng = np.random.default_rng(seed)
+        trunk = rng.integers(
+            1, cfg.vocab_size - 1, size=int(rng.integers(10, 22))
+        ).astype(np.int32)
+        kids = [
+            np.concatenate([trunk, rng.integers(
+                1, cfg.vocab_size - 1, size=int(k)).astype(np.int32)])
+            for k in rng.integers(0, 9, size=3)
+        ]
+        return [[trunk], kids]
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=50), tight=st.booleans())
+    def test_cow_outputs_bit_for_bit(self, seed, tight):
+        """Shared-trunk waves through dense, paged, and paged+COW engines:
+        sharing (hits, suffix-only prefill, COW splits, index eviction
+        under the tight budget) must never change a single output token."""
+        cfg, params = _model()
+        waves = self._trunk_waves(cfg, seed)
+
+        dense = self._run_waves(
+            ServingEngine(cfg, params, max_batch=3, max_seq_len=64), waves)
+        kv_blocks = 10 if tight else 24
+        plain = self._run_waves(ServingEngine(
+            cfg, params, max_batch=3, max_seq_len=64,
+            paged=True, kv_block_size=8, kv_blocks=kv_blocks), waves)
+        cow_eng = ServingEngine(
+            cfg, params, max_batch=3, max_seq_len=64,
+            paged=True, kv_block_size=8, kv_blocks=kv_blocks,
+            prefix_sharing=True)
+        cow = self._run_waves(cow_eng, waves)
+
+        assert cow == dense == plain
+        ps = cow_eng.pool.prefix_stats
+        assert ps.lookups == 4 and ps.registrations >= 1
+        # at run end the only live pages are the index's retained ones
+        alloc = cow_eng.pool.allocator
+        alloc.assert_invariants()
+        assert alloc.used_blocks == cow_eng.pool._prefix.held_blocks
+        cow_eng.pool._prefix.clear()
+        assert alloc.used_blocks == 0
+
+    def test_defrag_mid_run_remaps_shared_exactly_once(self, setup):
+        """Defrag while the index holds shared pages: the trie is remapped
+        through the same old->new mapping (each entry exactly once) and
+        outputs stay invariant."""
+        cfg, params = setup
+        waves = self._trunk_waves(cfg, seed=7)
+        ref = self._run_waves(ServingEngine(
+            cfg, params, max_batch=3, max_seq_len=64,
+            paged=True, kv_block_size=8, kv_blocks=24,
+            prefix_sharing=True), waves)
+
+        eng = ServingEngine(cfg, params, max_batch=3, max_seq_len=64,
+                            paged=True, kv_block_size=8, kv_blocks=24,
+                            prefix_sharing=True)
+        outs = [self._run_waves(eng, waves[:1])[0]]
+        idx = eng.pool._prefix
+        held_before = sorted(idx.blocks())
+        assert held_before, "wave 1 registered nothing"
+        reqs = [eng.submit(p, max_new_tokens=6) for p in waves[1]]
+        for _ in range(2):
+            eng.step()
+        eng.pool.defrag()
+        held_after = sorted(idx.blocks())
+        assert len(held_after) == len(held_before) == idx.held_blocks
+        assert len(set(held_after)) == len(held_after), \
+            "defrag remapped a shared block twice (id collision)"
+        eng.pool.allocator.assert_invariants()
+        eng.run_to_completion(max_steps=4000)
+        assert all(r.done for r in reqs)
+        outs.append([r.output for r in reqs])
+        assert outs == ref
 
 
 # ------------------------------------------------------ traffic and energy

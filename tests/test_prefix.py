@@ -1,0 +1,261 @@
+"""Prefix sharing: trie/index units over the refcounted allocator, the
+copy-on-write contract at the engine level, index eviction under pressure,
+and the saved-energy side-channel's conservation property."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import init_params
+from repro.serving import BlockAllocator, ServingEngine
+from repro.serving.prefix import PrefixIndex, PrefixStats
+
+BS = 4
+
+_CACHE = {}
+
+
+def _model():
+    if "m" not in _CACHE:
+        cfg = reduced_config("gemma-2b")
+        _CACHE["m"] = (cfg, init_params(cfg, jax.random.PRNGKey(0)))
+    return _CACHE["m"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _model()
+
+
+def _index(num_blocks=32):
+    alloc = BlockAllocator(num_blocks, BS)
+    return alloc, PrefixIndex(alloc)
+
+
+def _register(alloc, idx, tokens, cached_len, owner=1):
+    """Allocate backing pages as a request would, register, free the
+    request's references (the index's retains keep the pages live)."""
+    blocks = alloc.alloc(alloc.blocks_for_tokens(cached_len), owner)
+    kept = idx.register(tokens, blocks, cached_len)
+    alloc.free(blocks, owner)
+    return blocks, kept
+
+
+# ------------------------------------------------------------------ the trie
+class TestPrefixIndex:
+    def test_empty_index_misses(self):
+        _, idx = _index()
+        assert idx.match(np.arange(12)) is None
+        assert idx.peek(np.arange(12)) == (0, 0)
+
+    def test_exact_full_block_hit_recomputes_last_token(self):
+        alloc, idx = _index()
+        toks = np.arange(100, 112)
+        blocks, kept = _register(alloc, idx, toks, 12)
+        assert kept == 3 and idx.held_blocks == 3
+        hit = idx.match(toks)
+        assert hit.full_blocks == blocks and hit.tail_block is None
+        # whole prompt is shared blocks: cover L-1, recompute the last token
+        assert (hit.prefix_tokens, hit.tokens_covered) == (11, 12)
+        assert hit.shared_entries == 3 and hit.table_blocks == blocks
+
+    def test_boundary_tail_hit_covers_partial_block(self):
+        alloc, idx = _index()
+        toks = np.arange(100, 112)
+        blocks, _ = _register(alloc, idx, toks, 12)
+        hit = idx.match(toks[:10])          # 2 full blocks + 2-token partial
+        assert hit.full_blocks == blocks[:2] and hit.tail_block == blocks[2]
+        assert (hit.prefix_tokens, hit.tokens_covered) == (9, 10)
+        # the suffix prefill gathers every block covering [0, 9)
+        assert hit.gather_blocks(BS) == blocks
+
+    def test_partial_hit_stops_at_divergence(self):
+        alloc, idx = _index()
+        toks = np.arange(100, 112)
+        blocks, _ = _register(alloc, idx, toks, 12)
+        fork = np.concatenate([toks[:8], [7, 7, 7, 7]])
+        hit = idx.match(fork)
+        assert hit.full_blocks == blocks[:2] and hit.tail_block is None
+        assert (hit.prefix_tokens, hit.tokens_covered) == (8, 8)
+
+    def test_peek_matches_match_without_lru_touch(self):
+        alloc, idx = _index()
+        toks = np.arange(100, 112)
+        _register(alloc, idx, toks, 12)
+        ticks = [n.touch for n, _ in idx._walk()]
+        assert idx.peek(toks) == (3, 11)
+        assert idx.peek(toks[:10]) == (3, 9)
+        assert [n.touch for n, _ in idx._walk()] == ticks, "peek touched LRU"
+        hit = idx.match(toks[:10])
+        assert (hit.shared_entries, hit.prefix_tokens) == (3, 9)
+
+    def test_register_dedups_on_first_donor(self):
+        alloc, idx = _index()
+        toks = np.arange(100, 112)
+        first, _ = _register(alloc, idx, toks, 12)
+        # an identical transcript donates nothing: caller frees, pages die
+        dup = alloc.alloc(3, owner=2)
+        assert idx.register(toks, dup, 12) == 0
+        alloc.free(dup, 2)
+        assert idx.held_blocks == 3
+        assert idx.match(toks).full_blocks == first
+        assert all(alloc.refcount(b) == 0 for b in dup)
+
+    def test_eviction_is_lru_and_refcount_gated(self):
+        alloc, idx = _index(num_blocks=8)
+        a = np.arange(100, 108)
+        b = np.arange(200, 208)
+        blocks_a, _ = _register(alloc, idx, a, 8)
+        blocks_b, _ = _register(alloc, idx, b, 8)
+        idx.match(a)                         # a is now most recently touched
+        assert idx.evict_one()
+        # LRU: b's chain drains first — its leaf is the oldest evictable
+        assert alloc.refcount(blocks_b[1]) == 0
+        assert alloc.refcount(blocks_a[1]) == 1
+        # a page some live request still references is never evicted
+        alloc.retain(blocks_b[0], owner=9)
+        assert idx.reclaimable_blocks() == 2
+        assert idx.evict_one() and idx.evict_one()   # a's chain drains
+        assert not idx.evict_one()                   # only the pin remains
+        assert idx.held_blocks == 1
+        alloc.release(blocks_b[0], owner=9)
+        assert idx.evict_one() and not idx.evict_one()
+        assert idx.held_blocks == 0
+        alloc.assert_invariants()
+        assert alloc.used_blocks == 0
+
+    def test_remap_rewrites_every_entry_exactly_once(self):
+        alloc, idx = _index()
+        toks = np.arange(100, 110)          # 2 full + 1 tail entry
+        _register(alloc, idx, toks, 10)
+        held = sorted(idx.blocks())
+        mapping = {b: b + 10 for b in range(1, alloc.num_blocks + 1)}
+        assert idx.remap(mapping) == len(held) == 3
+        assert sorted(idx.blocks()) == [b + 10 for b in held]
+
+    def test_clear_releases_everything(self):
+        alloc, idx = _index()
+        _register(alloc, idx, np.arange(100, 112), 12)
+        _register(alloc, idx, np.arange(200, 210), 10)
+        assert idx.clear() == 6          # 3 full + (2 full + 1 tail)
+        alloc.assert_invariants()
+        assert alloc.used_blocks == 0 and idx.held_blocks == 0
+
+
+# ------------------------------------------------------------------- stats
+class TestPrefixStats:
+    def test_merge_and_dict_roundtrip(self):
+        a = PrefixStats(lookups=4, hits=3, misses=1, saved_prefill_j=0.5)
+        b = PrefixStats(lookups=2, hits=1, misses=1, cow_splits=2)
+        a.merge(b)
+        d = a.as_dict()
+        assert (d["lookups"], d["hits"], d["cow_splits"]) == (6, 4, 2)
+        assert d["hit_rate"] == pytest.approx(4 / 6)
+        assert PrefixStats().hit_rate == 0.0
+
+
+# --------------------------------------------------------- engine-level COW
+def _engine(cfg, params, *, sharing, kv_blocks=64):
+    return ServingEngine(
+        cfg, params, max_batch=3, max_seq_len=64,
+        paged=True, kv_block_size=8, kv_blocks=kv_blocks,
+        prefix_sharing=sharing,
+    )
+
+
+def _waves(eng, waves, max_new=6):
+    outs = []
+    for wave in waves:
+        reqs = [eng.submit(p, max_new_tokens=max_new) for p in wave]
+        eng.run_to_completion(max_steps=4000)
+        assert all(r.done for r in reqs)
+        outs.append([r.output for r in reqs])
+    return outs
+
+
+class TestEngineSharing:
+    def test_shared_trunk_hits_and_outputs_match(self, setup):
+        """Turn-style reuse: wave 2 extends wave 1's prompts. Sharing must
+        change counters and saved work — never a single token."""
+        cfg, params = setup
+        rng = np.random.default_rng(0)
+        trunk = rng.integers(1, cfg.vocab_size - 1, size=20).astype(np.int32)
+        waves = [
+            [trunk],
+            [np.concatenate([trunk, rng.integers(1, cfg.vocab_size - 1,
+                                                 size=k).astype(np.int32)])
+             for k in (3, 5)],
+        ]
+        plain = _waves(_engine(cfg, params, sharing=False), waves)
+        cow_eng = _engine(cfg, params, sharing=True)
+        cow = _waves(cow_eng, waves)
+        assert cow == plain
+        ps = cow_eng.pool.prefix_stats
+        assert ps.registrations >= 1 and ps.hits == 2
+        assert ps.shared_tokens > 0 and ps.saved_prefill_tokens > 0
+        assert ps.saved_migrate_bytes > 0
+
+    def test_exact_fork_cow_splits_shared_tail(self, setup):
+        """A child resubmitting the parent's exact prompt gets a boundary
+        tail hit; its first decode write lands in the shared tail page and
+        must COW-split it — shared pages are never written."""
+        cfg, params = setup
+        rng = np.random.default_rng(1)
+        trunk = rng.integers(1, cfg.vocab_size - 1, size=20).astype(np.int32)
+        plain = _waves(_engine(cfg, params, sharing=False), [[trunk], [trunk]])
+        cow_eng = _engine(cfg, params, sharing=True)
+        cow = _waves(cow_eng, [[trunk], [trunk]])
+        assert cow == plain
+        ps = cow_eng.pool.prefix_stats
+        assert ps.hits == 1 and ps.cow_splits >= 1
+
+    def test_saved_energy_is_a_side_channel(self, setup):
+        """Conservation: per-request energies sum to the pool totals with
+        sharing on, and the saved joules appear in NEITHER."""
+        from repro.core.energy import EnergyModel
+        from repro.hw import H200_SXM
+        from repro.serving.controller import ClockController
+
+        cfg, params = setup
+        from repro.configs import get_config
+        ctl = ClockController(EnergyModel(H200_SXM), get_config("gemma-2b"))
+        rng = np.random.default_rng(2)
+        trunk = rng.integers(1, cfg.vocab_size - 1, size=24).astype(np.int32)
+        eng = ServingEngine(
+            cfg, params, max_batch=3, max_seq_len=64, paged=True,
+            kv_block_size=8, kv_blocks=64, prefix_sharing=True,
+            controller=ctl,
+        )
+        done = []
+        for wave in ([trunk], [np.concatenate([trunk, [5, 6, 7]])]):
+            reqs = [eng.submit(p, max_new_tokens=5) for p in wave]
+            eng.run_to_completion(max_steps=4000)
+            done.extend(reqs)
+        ps = eng.pool.prefix_stats
+        assert ps.hits == 1 and ps.saved_prefill_j > 0
+        st = eng.pool.stats
+        assert sum(r.prefill_j for r in done) == pytest.approx(st.prefill_j)
+        assert sum(r.decode_j for r in done) == pytest.approx(st.decode_j)
+        # the request-side mirror of the side-channel agrees with the pool's
+        assert sum(r.saved_prefill_j for r in done) == pytest.approx(
+            ps.saved_prefill_j)
+
+    def test_index_evicts_before_preempting_under_pressure(self, setup):
+        """A tight budget stuffed with registered pages: admission reclaims
+        index pages (evictions > 0) instead of failing or preempting."""
+        cfg, params = setup
+        rng = np.random.default_rng(3)
+        eng = _engine(cfg, params, sharing=True, kv_blocks=12)
+        waves = [[rng.integers(1, cfg.vocab_size - 1, size=24).astype(np.int32)]
+                 for _ in range(4)]
+        _waves(eng, waves, max_new=4)
+        ps = eng.pool.prefix_stats
+        assert ps.registrations >= 2
+        assert ps.evictions > 0
+        eng.pool.allocator.assert_invariants()
+
+    def test_sharing_requires_paged_and_shareable_arch(self, setup):
+        cfg, params = setup
+        with pytest.raises(ValueError, match="paged"):
+            ServingEngine(cfg, params, max_batch=2, max_seq_len=64,
+                          prefix_sharing=True)

@@ -151,3 +151,108 @@ class TestLengthBuckets:
         t = TracedRequest(arrival_s=0.0, prompt=np.arange(4, dtype=np.int32),
                           max_new_tokens=2)
         assert t.bucket == "mixed"
+
+
+class TestConversationTrees:
+    """Tree-shaped workloads (multi-turn chat, agentic fan-out): the
+    prefix-sharing traffic generators."""
+
+    def test_conversation_seeded_determinism(self):
+        from repro.core import generate_conversation_trace
+        a = generate_conversation_trace(CFG, 3, seed=9)
+        b = generate_conversation_trace(CFG, 3, seed=9)
+        assert len(a) == len(b) > 3
+        for x, y in zip(a, b):
+            assert (x.arrival_s, x.max_new_tokens, x.conv, x.parent,
+                    x.turn) == (y.arrival_s, y.max_new_tokens, y.conv,
+                                y.parent, y.turn)
+            np.testing.assert_array_equal(x.prompt, y.prompt)
+        c = generate_conversation_trace(CFG, 3, seed=10)
+        assert any(x.arrival_s != y.arrival_s for x, y in zip(a, c))
+
+    def test_fanout_seeded_determinism(self):
+        from repro.core import generate_fanout_trace
+        a = generate_fanout_trace(CFG, 2, fanout=3, seed=4)
+        b = generate_fanout_trace(CFG, 2, fanout=3, seed=4)
+        assert len(a) == len(b) == 2 * 4
+        for x, y in zip(a, b):
+            assert x.arrival_s == y.arrival_s and x.parent == y.parent
+            np.testing.assert_array_equal(x.prompt, y.prompt)
+
+    def test_turns_extend_parent_prompt_and_arrive_later(self):
+        """Turn k's prompt starts with turn k-1's whole prompt, and the
+        child lands at least the minimum think gap after its parent."""
+        from repro.core import generate_conversation_trace
+        trace = generate_conversation_trace(
+            CFG, 3, turns=4, think_s=(2.0, 4.0), seed=6)
+        assert all(trace[i].arrival_s <= trace[i + 1].arrival_s
+                   for i in range(len(trace) - 1)), "trace not sorted"
+        children = [t for t in trace if t.parent >= 0]
+        assert children
+        for t in children:
+            p = trace[t.parent]
+            assert p.conv == t.conv and p.turn == t.turn - 1
+            assert t.arrival_s >= p.arrival_s + 2.0
+            assert len(t.prompt) > len(p.prompt)
+            np.testing.assert_array_equal(t.prompt[:len(p.prompt)], p.prompt)
+
+    def test_fanout_siblings_share_identical_trunk(self):
+        from repro.core import generate_fanout_trace
+        trace = generate_fanout_trace(
+            CFG, 2, fanout=4, trunk_len=24, child_suffix=(0, 6), seed=8)
+        roots = {t.conv: t for t in trace if t.parent < 0}
+        assert len(roots) == 2
+        for t in trace:
+            if t.parent < 0:
+                continue
+            trunk = roots[t.conv].prompt
+            assert trace[t.parent] is roots[t.conv]
+            assert t.arrival_s > roots[t.conv].arrival_s
+            assert len(t.prompt) >= len(trunk)
+            np.testing.assert_array_equal(t.prompt[:len(trunk)], trunk)
+        # the exact-fork case (0-length suffix) must be reachable: a child
+        # whose prompt IS the trunk byte-for-byte
+        forks = generate_fanout_trace(
+            CFG, 1, fanout=4, trunk_len=24, child_suffix=(0, 0), seed=0)
+        trunk = forks[0].prompt
+        for t in forks[1:]:
+            np.testing.assert_array_equal(t.prompt, trunk)
+
+    def test_flat_requests_are_not_tree_tagged(self):
+        flat = generate_trace(CFG, 5, seed=2, rate_rps=3.0)
+        assert all((t.conv, t.parent, t.turn) == (-1, -1, 0) for t in flat)
+
+    def test_bad_tree_args_raise(self):
+        from repro.core import generate_conversation_trace, generate_fanout_trace
+        with pytest.raises(ValueError):
+            generate_conversation_trace(CFG, 0)
+        with pytest.raises(ValueError):
+            generate_fanout_trace(CFG, 1, fanout=0)
+
+    def test_children_arrive_after_parent_finishes(self):
+        """Replay a fan-out trace through a sharing fleet: every child must
+        find the trunk already registered (parent finished and donated its
+        pages before the child arrived) — hits == number of children."""
+        import jax
+        from repro.core import EnergyModel, generate_fanout_trace
+        from repro.hw import H200_SXM
+        from repro.models import init_params
+        from repro.serving import (
+            ClockSpec, Fleet, FleetSpec, PoolSpec, ReplicaSpec)
+
+        trace = generate_fanout_trace(CFG, 1, fanout=3, trunk_len=32, seed=3)
+        spec = FleetSpec(
+            replicas=(ReplicaSpec(
+                name="r0", arch="gemma-2b", clock=ClockSpec(mode="lock"),
+                decode=PoolSpec(batch=4, paged=True, kv_block_size=16,
+                                kv_blocks=96, prefix_sharing=True),
+                max_seq_len=128),),
+            router="jsq",
+        )
+        fleet = Fleet.from_spec(
+            spec, emodel=EnergyModel(H200_SXM),
+            params_for={"gemma-2b": init_params(CFG, jax.random.PRNGKey(0))})
+        done = fleet.run_trace(trace, engine="events")
+        assert len(done) == len(trace)
+        ps = fleet.prefix_stats_total()
+        assert ps.hits == 3 and ps.misses == 1
