@@ -17,6 +17,12 @@ dispatch). The levers under test (``repro.serving.events`` +
     pow2 group bucketing      fused program cache stays O(log fleet) on a
                               drifting fleet instead of one trace per
                               group size
+    batched replica axis      a fused group of K pools runs as ONE
+                              vmap/shard_map-batched program over
+                              replica-stacked cache banks instead of a
+                              tuple of K traced sub-calls
+                              (``batch_replicas``; ``--batched=off``
+                              replays the tuple baseline)
     allocation-free loops     request/ledger freelists + ``on_finish``
                               streaming keep the replay memory-flat;
                               round-robin routing is O(1) per arrival
@@ -39,12 +45,18 @@ Asserted:
                 under an absolute ceiling
     quantum     ``fusion_quantum_s=0`` replays byte-identical to the
                 exact-tie engine; a positive quantum changes no token
+    batched     the vmap-batched fused dispatch streams to the SAME
+                sha256 as the tuple-of-K program, and its measured wall
+                per fused call beats the tuple's at group sizes >= 8
+                (the dispatch-vs-group-size curve lands in the JSON)
     wall        slowest full replay fits the budget
                 (REPRO_SCALE_TIME_BUDGET_S, default 3600 s; 0 waives)
 
 Run:  PYTHONPATH=src python -m benchmarks.serve_scale            # full
   or: PYTHONPATH=src python -m benchmarks.serve_scale --smoke    # CI tier
   add --json to write BENCH_serve_scale.json (schema-versioned artefact)
+  add --batched=off to replay the tuple-of-K baseline (artefact goes to
+  BENCH_serve_scale_unbatched.json so both modes can be diffed)
 """
 from __future__ import annotations
 
@@ -61,7 +73,14 @@ from benchmarks.common import h200_model, write_bench_json, write_csv
 from repro.configs import reduced_config
 from repro.core.traces import TracedRequest
 from repro.models import init_params
-from repro.serving import ClockSpec, Fleet, FleetSpec, PoolSpec, ReplicaSpec
+from repro.serving import (
+    ClockSpec,
+    Fleet,
+    FleetSpec,
+    PoolSpec,
+    ReplicaSpec,
+    clear_program_caches,
+)
 from repro.serving.pool import release_request
 
 ARCH_MAIN = "gemma-2b"
@@ -79,6 +98,7 @@ QUANTUM_S = 0.0005                  # ~ a quarter step: re-fuses drift
 TRACE_SEED = 23
 DISPATCH_CEILING = 1.5              # jit dispatches per request, full run
 JSON_PATH = "BENCH_serve_scale.json"
+UNBATCHED_JSON_PATH = "BENCH_serve_scale_unbatched.json"
 # wall-clock budget for ONE full replay; 0 waives
 TIME_BUDGET_S = float(os.environ.get("REPRO_SCALE_TIME_BUDGET_S", "3600"))
 
@@ -197,6 +217,8 @@ def replay(trace, **engine_opts):
         "dispatches_per_request": st.jit_dispatches / max(len(trace), 1),
         "fused_decode_coverage": st.fused_decode_coverage,
         "fused_prefill_coverage": st.fused_prefill_coverage,
+        "batched_decode_calls": st.batched_decode_calls,
+        "bank_rebuilds": st.bank_rebuilds,
         "peak_heap": st.peak_heap,
         "events": st.events,
         "total_j": fleet.total_energy_j(),
@@ -207,13 +229,46 @@ def replay(trace, **engine_opts):
     return metrics, stream.digest(fleet), wall_s
 
 
-def run(smoke: bool = False, write_json: bool = False):
+def dispatch_curve(smoke: bool):
+    """Measured wall seconds inside fused decode dispatches vs group size,
+    batched vs tuple program, on the aligned trace (full fused coverage).
+    ``clear_program_caches()`` between points so every point pays its own
+    compiles — the curve is (compile + dispatch) per fused call, the cost a
+    replay actually sees the first time it meets a group size."""
+    sweep = (4, 8, 32) if smoke else (4, 8, 16, 32, 64)
+    n = 1_500 if smoke else 20_000
+    trace, _ = aligned_trace(n)
+    curve: dict = {}
+    for g in sweep:
+        for mode, flag in (("batched", True), ("tuple", False)):
+            clear_program_caches()
+            fleet = make_fleet()
+            fleet.run_trace(trace, max_steps=1_000_000_000, engine_opts={
+                "fusion_quantum_s": QUANTUM_S, "max_fused_group": g,
+                "batch_replicas": flag, "time_dispatch": True})
+            st = fleet.last_engine_stats
+            calls = sum(int(v[0]) for v in st.fused_decode_wall.values())
+            secs = sum(v[1] for v in st.fused_decode_wall.values())
+            curve.setdefault(str(g), {})[mode] = {
+                "fused_calls": calls,
+                "dispatch_wall_s": secs,
+                "us_per_fused_call": 1e6 * secs / max(calls, 1),
+                "by_size": st.fused_decode_wall,
+            }
+    clear_program_caches()
+    return curve
+
+
+def run(smoke: bool = False, write_json: bool = False, batched: bool = True):
     """Harness contract: yields (name, us_per_call, derived) rows; raises
     on any violated completion/determinism/coverage/dispatch assertion."""
     if smoke:
         n_scale, n_aligned, n_compare = 4_000, 2_000, 1_000
     else:
         n_scale, n_aligned, n_compare = 1_000_000, 50_000, 10_000
+    # every replay below runs in the requested engine mode; the batched
+    # identity section crosses over to the OTHER mode to pin the sha
+    base = {"batch_replicas": batched}
 
     out_rows = []
     violations = []
@@ -223,8 +278,8 @@ def run(smoke: bool = False, write_json: bool = False):
     if dropped:
         print(f"serve_scale: dropped {dropped} requests to whole waves",
               file=sys.stderr)
-    first, sha_a, wall_a = replay(trace, fusion_quantum_s=QUANTUM_S)
-    again, sha_b, wall_b = replay(trace, fusion_quantum_s=QUANTUM_S)
+    first, sha_a, wall_a = replay(trace, fusion_quantum_s=QUANTUM_S, **base)
+    again, sha_b, wall_b = replay(trace, fusion_quantum_s=QUANTUM_S, **base)
     out_rows.append((
         "serve_scale/replay",
         1e6 * wall_a / max(len(trace), 1),
@@ -258,7 +313,7 @@ def run(smoke: bool = False, write_json: bool = False):
 
     # ---- aligned phase: fused coverage ------------------------------------
     atrace, _ = aligned_trace(n_aligned)
-    amet, _, _ = replay(atrace)
+    amet, _, _ = replay(atrace, **base)
     if amet["fused_decode_coverage"] < 0.80:
         violations.append(
             f"aligned fused decode coverage "
@@ -271,8 +326,8 @@ def run(smoke: bool = False, write_json: bool = False):
 
     # ---- dispatch count: full fusion vs the PR-6 dispatch pattern ---------
     ctrace, _ = scale_trace(n_compare)
-    fused_m, fused_sha, _ = replay(ctrace, fusion_quantum_s=QUANTUM_S)
-    serial_m, _, _ = replay(ctrace, fuse_prefill=False)
+    fused_m, fused_sha, _ = replay(ctrace, fusion_quantum_s=QUANTUM_S, **base)
+    serial_m, _, _ = replay(ctrace, fuse_prefill=False, **base)
     if not fused_m["jit_dispatches"] < serial_m["jit_dispatches"]:
         violations.append(
             f"fusion did not reduce dispatches: "
@@ -284,9 +339,29 @@ def run(smoke: bool = False, write_json: bool = False):
         f"saved_pct={100 * (1 - fused_m['jit_dispatches'] / max(serial_m['jit_dispatches'], 1)):.1f}",
     ))
 
+    # ---- batched replica axis: cross-mode byte identity -------------------
+    # the tentpole gate: ONE vmap-batched program over replica-stacked
+    # cache banks streams to the SAME sha256 as the tuple of K traced
+    # sub-calls on the same trace
+    cross_m, cross_sha, _ = replay(ctrace, fusion_quantum_s=QUANTUM_S,
+                                   batch_replicas=not batched)
+    if cross_sha != fused_sha:
+        violations.append(
+            "batched fused dispatch NOT byte-identical to the tuple-of-K "
+            "program")
+    bat_m = fused_m if batched else cross_m
+    if bat_m["batched_decode_calls"] == 0:
+        violations.append("batched replica axis was never exercised")
+    out_rows.append((
+        "serve_scale/batched_identity", 0.0,
+        f"byte_identical={cross_sha == fused_sha};"
+        f"batched_decode_calls={bat_m['batched_decode_calls']};"
+        f"bank_rebuilds={bat_m['bank_rebuilds']}",
+    ))
+
     # ---- quantum semantics ------------------------------------------------
-    q0_m, q0_sha, _ = replay(ctrace, fusion_quantum_s=0.0)
-    exact_m, exact_sha, _ = replay(ctrace)
+    q0_m, q0_sha, _ = replay(ctrace, fusion_quantum_s=0.0, **base)
+    exact_m, exact_sha, _ = replay(ctrace, **base)
     if q0_sha != exact_sha:
         violations.append("quantum=0 NOT byte-identical to exact-tie engine")
     if fused_sha != q0_sha:
@@ -298,6 +373,26 @@ def run(smoke: bool = False, write_json: bool = False):
         f"q0_identical={q0_sha == exact_sha};"
         f"q_invariant={fused_sha == q0_sha};quantum_s={QUANTUM_S}",
     ))
+
+    # ---- dispatch wall vs group size: batched must win at >= 8 ------------
+    # only in the primary (batched) invocation: the curve already measures
+    # BOTH modes per point, so the opt-out artefact need not repeat it
+    curve = {}
+    if batched:
+        curve = dispatch_curve(smoke)
+        for g, point in sorted(curve.items(), key=lambda kv: int(kv[0])):
+            b = point["batched"]["us_per_fused_call"]
+            t = point["tuple"]["us_per_fused_call"]
+            if int(g) >= 8 and not b < t:
+                violations.append(
+                    f"batched dispatch slower at group size {g}: "
+                    f"{b:.0f}us vs tuple {t:.0f}us per fused call")
+            out_rows.append((
+                f"serve_scale/dispatch_curve/g{g}", b,
+                f"batched_us_per_call={b:.0f};tuple_us_per_call={t:.0f};"
+                f"speedup={t / max(b, 1e-9):.2f}x;"
+                f"calls={point['batched']['fused_calls']}",
+            ))
 
     # ---- wall budget ------------------------------------------------------
     slowest = max(wall_a, wall_b)
@@ -314,6 +409,12 @@ def run(smoke: bool = False, write_json: bool = False):
     results = {"scale": first, "scale_sha": sha_a, "aligned": amet,
                "dispatch": {"fused": fused_m["jit_dispatches"],
                             "serial": serial_m["jit_dispatches"]},
+               "batched": {"mode": "batched" if batched else "tuple",
+                           "cross_mode_identical": cross_sha == fused_sha,
+                           "batched_decode_calls":
+                               bat_m["batched_decode_calls"],
+                           "bank_rebuilds": bat_m["bank_rebuilds"]},
+               "dispatch_curve": curve,
                "wall_s": [wall_a, wall_b]}
     write_csv("serve_scale", ["metric", "value"],
               [[k, v] for k, v in first.items() if k != "engine_stats"]
@@ -322,15 +423,16 @@ def run(smoke: bool = False, write_json: bool = False):
                  ["dispatch_fused", fused_m["jit_dispatches"]],
                  ["dispatch_serial", serial_m["jit_dispatches"]]])
     if write_json:
+        json_path = JSON_PATH if batched else UNBATCHED_JSON_PATH
         write_bench_json(
-            "serve_scale", results, smoke=smoke, path=JSON_PATH,
+            "serve_scale", results, smoke=smoke, path=json_path,
             trace={"n": len(trace), "n_requested": n_scale,
                    "dropped": dropped, "shape": "aligned+drifted",
                    "wave_dt_s": WAVE_DT_S, "quantum_s": QUANTUM_S,
                    "prompt_len": PROMPT_LEN, "max_new": MAX_NEW,
-                   "seed": TRACE_SEED},
+                   "seed": TRACE_SEED, "batched": batched},
         )
-        out_rows.append(("serve_scale/json", 0.0, f"wrote={JSON_PATH}"))
+        out_rows.append(("serve_scale/json", 0.0, f"wrote={json_path}"))
     if violations:
         raise RuntimeError("; ".join(violations))
     return out_rows
@@ -340,9 +442,18 @@ def main():
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
     write_json = "--json" in argv
+    batched = True
+    for a in argv:
+        if a.startswith("--batched"):
+            val = a.partition("=")[2] or "on"
+            if val not in ("on", "off"):
+                print(f"--batched takes on|off, got {val!r}")
+                sys.exit(2)
+            batched = val == "on"
     ok = True
     try:
-        for name, us, derived in run(smoke=smoke, write_json=write_json):
+        for name, us, derived in run(smoke=smoke, write_json=write_json,
+                                     batched=batched):
             print(f"{name},{us:.1f},{derived}")
     except RuntimeError as e:
         print(f"serve_scale checks VIOLATED: {e}")

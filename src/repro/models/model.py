@@ -539,3 +539,72 @@ def decode_step_paged(
     )
     x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
     return logits(params, cfg, x)[:, 0], new_cache, lengths + 1
+
+
+# ---------------------------------------------------------------------------
+# Replica batching. A fleet of K homogeneous replicas stepping at the same
+# instant is K independent evaluations of the SAME program over stacked
+# state — exactly what ``jax.vmap`` expresses: params broadcast, everything
+# else (tokens, caches, lengths, RNG keys) carries a leading replica axis,
+# and XLA sees ONE batched graph instead of K copies of the per-replica one.
+# ``shard_map_replicas`` lays the same batched call out over a device mesh so
+# a multi-device host runs replica shards in parallel; with one device it is
+# the identity layout (and bitwise-identical to the plain vmap).
+
+
+def vmap_replicas(step_fn: Any, n_args: int, n_broadcast: int = 1):
+    """Batch a per-replica step function over a leading replica axis.
+
+    The first ``n_broadcast`` arguments broadcast unchanged (weights shared
+    by the whole group); the remaining ``n_args - n_broadcast`` are stacked
+    per replica (axis 0). Outputs all carry the replica axis."""
+    axes = (None,) * n_broadcast + (0,) * (n_args - n_broadcast)
+    return jax.vmap(step_fn, in_axes=axes)
+
+
+def shard_map_replicas(step_fn: Any, n_args: int, n_broadcast: int = 1,
+                       *, axis_name: str = "replica", devices=None):
+    """``vmap_replicas`` laid out over the host's devices: the replica axis
+    is sharded across a 1-D mesh, so each device runs its shard of the
+    group concurrently. The replica count must divide the device count's
+    shard evenly (pow2 group padding guarantees this for pow2 device
+    counts). Per-replica computations never communicate, so the result is
+    bitwise the single-device vmap's."""
+    import numpy as _np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec
+
+    if devices is None:
+        devices = jax.devices()
+    mesh = Mesh(_np.asarray(devices), (axis_name,))
+    spec_in = ((PartitionSpec(),) * n_broadcast
+               + (PartitionSpec(axis_name),) * (n_args - n_broadcast))
+    vf = vmap_replicas(step_fn, n_args, n_broadcast)
+    return shard_map(vf, mesh=mesh, in_specs=spec_in,
+                     out_specs=PartitionSpec(axis_name))
+
+
+def decode_step_batched(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,                # (K, B) int32 — replica-stacked
+    cache: Dict,                      # leaves (K, ...) — replica-stacked
+    lengths: jax.Array,               # (K, B)
+) -> Tuple[jax.Array, Dict, jax.Array]:
+    """K replicas' ``decode_step`` as one batched call (params shared)."""
+    fn = vmap_replicas(
+        lambda p, tk, c, ln: decode_step(p, cfg, tk, c, ln), 4)
+    return fn(params, tokens, cache, lengths)
+
+
+def prefill_batched(
+    params: Dict,
+    cfg: ModelConfig,
+    inputs: jax.Array,                # (K, B, S) int32 — replica-stacked
+    cache: Dict,                      # leaves (K, ...) — replica-stacked
+    prompt_lengths: jax.Array,        # (K, B)
+) -> Tuple[jax.Array, Dict, jax.Array]:
+    """K replicas' ``prefill`` as one batched call (params shared)."""
+    fn = vmap_replicas(
+        lambda p, inp, c, pl: prefill(p, cfg, inp, c, prompt_lengths=pl), 4)
+    return fn(params, inputs, cache, prompt_lengths)

@@ -26,7 +26,13 @@ from repro.serving.engine import EOS, PhaseStats, Request, ServingEngine
 from repro.serving.events import EngineStats, EventDrivenFleet
 from repro.serving.fleet import Fleet, Replica, Scheduler
 from repro.serving.paged_cache import NULL_PAGE, BlockAllocator, TrafficCounter
-from repro.serving.pool import Pool
+from repro.serving.pool import (
+    BankRow,
+    CacheBank,
+    Pool,
+    clear_program_caches,
+    params_token_for,
+)
 from repro.serving.prefix import PrefixHit, PrefixIndex, PrefixStats
 from repro.serving.router import (
     ROUTERS,
@@ -40,6 +46,7 @@ from repro.serving.router import (
 )
 from repro.serving.spec import (
     CLOCK_MODES,
+    ENGINE_OPT_KEYS,
     AutoscalerSpec,
     ClockSpec,
     FleetSpec,
@@ -53,6 +60,10 @@ __all__ = [
     "Request",
     "ServingEngine",
     "Pool",
+    "CacheBank",
+    "BankRow",
+    "clear_program_caches",
+    "params_token_for",
     "Cluster",
     "Scheduler",
     "Replica",
@@ -79,6 +90,7 @@ __all__ = [
     "PrefixStats",
     # spec layer
     "CLOCK_MODES",
+    "ENGINE_OPT_KEYS",
     "PoolSpec",
     "ClockSpec",
     "ReplicaSpec",

@@ -18,10 +18,22 @@ their OWN dependencies are ready. Consequences:
   and the autoscaler; a fast replica takes as many steps as fit in the
   time a slow one needs for one.
 * **Fused homogeneous decode.** Decode events that pop at the same virtual
-  time with the same model signature batch through ONE jitted call over a
-  tuple of per-pool argument tuples (each pool still splits its own RNG
-  key and keeps its own accounting, so token streams are independent of
-  grouping); at K aligned replicas this saves K-1 jit dispatches per step.
+  time with the same model signature batch through ONE jitted call (each
+  pool still splits its own RNG key and keeps its own accounting, so token
+  streams are independent of grouping); at K aligned replicas this saves
+  K-1 jit dispatches per step.
+* **Batched replica axis** (``batch_replicas``, default on). The fused
+  group's K independent replica steps run as ONE ``jax.vmap``-batched
+  program over replica-stacked buffers instead of K traced sub-calls: the
+  stacked KV/state caches persist between steps in a ``CacheBank``
+  (``repro.serving.pool``) whose rows the member pools hold as views, so a
+  stable group pays no stack/unstack work — XLA compiles one sub-graph
+  instead of K and the donated stack updates in place. An opt-in
+  ``batch_layout="shard_map"`` shards the replica axis over the host's
+  devices (multi-device hosts run replica shards concurrently; bitwise
+  identical to vmap since replicas never communicate).
+  ``batch_replicas=False`` restores the PR-7 tuple-of-K program — the
+  serial-fused byte-identity baseline the tests compare against.
 * **Fused admission prefill.** Admission (ADMIT) events that pop at the
   same instant batch the same way: every admission decided across the
   drained events defers its ``_jit_prefill`` dispatch, the engine groups
@@ -83,14 +95,22 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import time
 from collections import OrderedDict
 from typing import (
     Any, Callable, Deque, Dict, List, Optional, Set, Tuple, TYPE_CHECKING,
 )
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from repro.serving.pool import Pool, Request, observe_latencies, requeue_front
+from repro.models import shard_map_replicas, vmap_replicas
+from repro.serving.pool import (
+    BankRow, CacheBank, Pool, Request, observe_latencies, requeue_front,
+)
+
+BATCH_LAYOUTS = ("vmap", "shard_map")
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.serving.fleet import Fleet, Replica
@@ -110,15 +130,34 @@ _EPS = 1e-12
 # capped-LRU (kind, sig, pow2) bookkeeping, but cache misses resolve here
 # first, so a benchmark that replays the same fleet shape through several
 # fresh engines compiles each fused program once per process, not once per
-# engine.
-_PROGRAM_CACHE: Dict[Tuple[Any, ...], Any] = {}
+# engine. Capped LRU like ``pool._JIT_CACHE`` (the closures retain params
+# and compiled executables); ``pool.clear_program_caches()`` empties it.
+_PROGRAM_CACHE_CAP = 128
+_PROGRAM_CACHE: "OrderedDict[Tuple[Any, ...], Any]" = OrderedDict()
 
 
 def _program(key: Tuple[Any, ...], make: Callable[[], Any]):
     fn = _PROGRAM_CACHE.get(key)
     if fn is None:
         fn = _PROGRAM_CACHE[key] = make()
+        while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_CAP:
+            _PROGRAM_CACHE.popitem(last=False)
+    else:
+        _PROGRAM_CACHE.move_to_end(key)
     return fn
+
+
+def _batched_core(impl, layout: str, p2: int):
+    """The replica-batched decode body: params broadcast, everything else
+    stacked along the leading replica axis. ``shard_map`` lays the batch
+    over the host's devices when the padded size divides them; otherwise
+    (including the 1-device case, where the mesh would be trivial anyway)
+    plain ``vmap``. Module-level so the process-wide program cache never
+    retains an engine through the traced closure."""
+    n_dev = len(jax.devices())
+    if layout == "shard_map" and n_dev > 1 and p2 % n_dev == 0:
+        return shard_map_replicas(impl, 7)
+    return vmap_replicas(impl, 7)
 
 
 @dataclasses.dataclass(slots=True)
@@ -138,8 +177,24 @@ class EngineStats:
     fused_prefill_reqs: int = 0        # prefills served by fused dispatches
     fused_decode_calls: int = 0        # multi-pool decode jit dispatches
     serial_decode_calls: int = 0       # one-pool decode jit dispatches
+    batched_decode_calls: int = 0      # fused decode dispatches that ran as
+                                       # ONE vmap/shard_map-batched program
+                                       # (subset of fused_decode_calls)
+    batched_prefill_calls: int = 0     # ditto for fused admission prefill
+    bank_gathers: int = 0              # churned groups re-stacked by an
+                                       # in-program index gather off ONE
+                                       # still-resident bank (cheap)
+    bank_rebuilds: int = 0             # batched groups re-stacked the hard
+                                       # way: rows materialised from mixed
+                                       # banks / dense trees, stacked in-jit
     fused_traces: int = 0              # fused jit programs built (LRU inserts)
     pad_waste: int = 0                 # inert pad slots across fused calls
+    # measured wall seconds inside fused decode dispatches, keyed by the
+    # pow2-padded group size as a string: size -> [calls, seconds]. Only
+    # populated with ``time_dispatch=True`` (blocking on each dispatch
+    # perturbs overlap, so the default replay never pays it)
+    fused_decode_wall: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict)
     pool_jit_dispatches: int = 0       # serial dispatches made by the pools
                                        # (prefill + scatter + serial decode)
     # prefix-sharing counters (pool lifetime, summed over decode pools at
@@ -196,6 +251,9 @@ class EventDrivenFleet:
                  fuse_prefill: bool = True,
                  max_fused_group: int = 64,
                  fused_cache_cap: int = 64,
+                 batch_replicas: bool = True,
+                 batch_layout: str = "vmap",
+                 time_dispatch: bool = False,
                  on_finish: Optional[Callable[[Request], None]] = None):
         if not fleet.virtual:
             raise ValueError("the event engine needs VirtualClock replicas")
@@ -203,6 +261,9 @@ class EventDrivenFleet:
             raise ValueError("fusion_quantum_s must be >= 0")
         if max_fused_group < 1:
             raise ValueError("max_fused_group must be >= 1")
+        if batch_layout not in BATCH_LAYOUTS:
+            raise ValueError(f"batch_layout {batch_layout!r} not in "
+                             f"{BATCH_LAYOUTS}")
         self.fleet = fleet
         self.fast_path_min = max(2, int(fast_path_min))
         self.fusion_quantum_s = float(fusion_quantum_s)
@@ -210,6 +271,13 @@ class EventDrivenFleet:
         # pow2 so chunk sizes bucket onto themselves
         self.max_fused_group = 1 << (int(max_fused_group) - 1).bit_length()
         self.fused_cache_cap = max(4, int(fused_cache_cap))
+        # batch_replicas=True (the default) runs each fused group as ONE
+        # vmap-batched program over replica-stacked buffers; False keeps the
+        # PR-7 tuple-of-K program — the serial-fused byte-identity baseline
+        # and the opt-out flag for shapes where per-replica tracing wins
+        self.batch_replicas = bool(batch_replicas)
+        self.batch_layout = batch_layout
+        self.time_dispatch = bool(time_dispatch)
         self.on_finish = on_finish
         self.stats = EngineStats()
         self._heap: List[Tuple[float, int, int, str, Any]] = []
@@ -608,7 +676,9 @@ class EventDrivenFleet:
             if hit is not None:
                 continue
             toks, true_len, bucket = pp.prefill_tokens(req)
-            sig = (pp.cfg, id(pp.params), pp.max_seq_len, bucket)
+            # params_token (not id(params)): a stable monotonic identity
+            # that a GC'd fleet can never hand to a different pool's weights
+            sig = (pp.cfg, pp.params_token, pp.max_seq_len, bucket)
             g = groups.get(sig)
             if g is None:
                 g = groups[sig] = []
@@ -635,31 +705,65 @@ class EventDrivenFleet:
 
     def _prefill_fused_chunk(self, sig, items, results: Dict[int, Any]):
         """One fused prefill dispatch: K (pow2-padded) independent batch-1
-        bucketed prefills traced into one program. Identical per-request
+        bucketed prefills in one program. Identical per-request
         computations to the serial ``_jit_prefill`` calls — only the
         dispatch is shared (the same argument the fused decode path
-        already proves byte-exactly)."""
+        already proves byte-exactly).
+
+        With ``batch_replicas`` (default) the program is ONE vmapped
+        prefill over (P, 1, bucket)-stacked prompts, sliced back to the
+        per-request tuple inside jit; without it, K traced sub-calls (the
+        PR-7 tuple program)."""
         st = self.stats
         k = len(items)
         p = self._pow2(k)
         pp0, toks0, len0, bucket, _ = items[0]
-        toks = [it[1] for it in items] + [toks0] * (p - k)
-        lens = [it[2] for it in items] + [len0] * (p - k)
+        if self.batch_replicas:
+            toks = np.stack([it[1] for it in items]
+                            + [toks0] * (p - k))          # (P, 1, bucket)
+            lens = np.stack([it[2] for it in items]
+                            + [len0] * (p - k))           # (P, 1)
 
-        def build():
-            impl = pp0._prefill_impl
+            def build(p=p):
+                impl = pp0._prefill_impl
 
-            def make():
-                def fused(params, toks, lens):
-                    return tuple(impl(params, tk, ln, bucket)
-                                 for tk, ln in zip(toks, lens))
+                def make():
+                    def fused(params, toks, lens):
+                        vf = vmap_replicas(
+                            lambda pr, tk, ln: impl(pr, tk, ln, bucket), 3)
+                        logits, cache1 = vf(params, toks, lens)
+                        # per-request tuple OUT of jit so the precomputed
+                        # handoff consumes rows exactly like the tuple path
+                        return tuple(
+                            (logits[i],
+                             jax.tree.map(lambda x, i=i: x[i], cache1))
+                            for i in range(p))
 
-                return jax.jit(fused)
+                    return jax.jit(fused)
 
-            return _program(("prefill", impl, bucket), make)
+                return _program(("prefill_batched", impl, bucket, p), make)
 
-        fn = self._fused_fn(("prefill", sig, p), build)
-        outs = fn(pp0.params, tuple(toks), tuple(lens))
+            fn = self._fused_fn(("prefill", sig, p), build)
+            outs = fn(pp0.params, toks, lens)
+            st.batched_prefill_calls += 1
+        else:
+            toks = [it[1] for it in items] + [toks0] * (p - k)
+            lens = [it[2] for it in items] + [len0] * (p - k)
+
+            def build():
+                impl = pp0._prefill_impl
+
+                def make():
+                    def fused(params, toks, lens):
+                        return tuple(impl(params, tk, ln, bucket)
+                                     for tk, ln in zip(toks, lens))
+
+                    return jax.jit(fused)
+
+                return _program(("prefill", impl, bucket), make)
+
+            fn = self._fused_fn(("prefill", sig, p), build)
+            outs = fn(pp0.params, tuple(toks), tuple(lens))
         st.fused_prefill_calls += 1
         st.pad_waste += p - k
         for it, out in zip(items, outs):
@@ -765,7 +869,7 @@ class EventDrivenFleet:
         groups: Dict[Tuple[Any, ...], List["Replica"]] = {}
         for r in live:
             dp = r.decode_pool
-            sig = (dp.cfg.name, id(dp.params), dp.paged, dp.max_batch,
+            sig = (dp.cfg.name, dp.params_token, dp.paged, dp.max_batch,
                    dp.max_seq_len)
             groups.setdefault(sig, []).append(r)
         for sig, rs in groups.items():
@@ -778,44 +882,273 @@ class EventDrivenFleet:
         return finished_by
 
     def _decode_fused(self, sig, reps: List["Replica"]) -> Dict[str, List[Request]]:
-        """Jitted steps over K homogeneous dense pools: the per-pool
-        argument tuples form one pytree argument, so K XLA dispatches
-        collapse into ceil(K / max_fused_group). Each pool's key split,
-        sampling and accounting are byte-for-byte the per-pool path's —
-        only dispatch is shared. Chunk sizes pad to powers of two with a
-        repeat of the chunk's first pool (results discarded), so a
-        drifting fleet rebuilds O(log fleet) programs, not one per group
-        size."""
+        """Jitted steps over K homogeneous dense pools, in chunks of
+        ``max_fused_group`` padded to powers of two with a repeat of the
+        chunk's first pool (results discarded) so a drifting fleet rebuilds
+        O(log fleet) programs, not one per group size. Each pool's key
+        split, sampling and accounting are byte-for-byte the per-pool
+        path's — only dispatch is shared.
+
+        Two dispatch shapes per chunk:
+
+        * ``batch_replicas`` (default) — ONE ``vmap``-batched program over
+          replica-stacked buffers (``_decode_chunk_batched``). The stacked
+          cache persists between steps in a ``CacheBank`` the member pools
+          view through ``BankRow``s, so a stable group never re-stacks; an
+          optional ``shard_map`` layout spreads the replica axis over the
+          host's devices.
+        * tuple path (``batch_replicas=False``) — the PR-7 program of K
+          traced sub-calls (``_decode_chunk_tuple``), kept as the
+          byte-identity baseline and opt-out.
+        """
         st = self.stats
         pools = [r.decode_pool for r in reps]
-        pres = [p._decode_begin() for p in pools]
-        outs_all: List[Any] = []
+        if self.batch_replicas:
+            pres = [p._decode_begin(keep_view=True) for p in pools]
+        else:
+            pres = [p._decode_begin() for p in pools]
+        finished: Dict[str, List[Request]] = {}
         for i in range(0, len(reps), self.max_fused_group):
-            chunk = pres[i:i + self.max_fused_group]
-            k = len(chunk)
-            p2 = self._pow2(k)
-            args_list = [pre["args"][1:] for pre in chunk]
-            args_list.extend([args_list[0]] * (p2 - k))
-            pool0 = pools[i]
+            chunk_pools = pools[i:i + self.max_fused_group]
+            chunk_pres = pres[i:i + self.max_fused_group]
+            t0 = time.perf_counter() if self.time_dispatch else 0.0
+            if self.batch_replicas:
+                outs, p2 = self._decode_chunk_batched(sig, chunk_pools,
+                                                      chunk_pres)
+            else:
+                outs, p2 = self._decode_chunk_tuple(sig, chunk_pools,
+                                                    chunk_pres)
+            if self.time_dispatch:
+                jax.block_until_ready(outs)
+                ent = st.fused_decode_wall.setdefault(str(p2), [0, 0.0])
+                ent[0] += 1
+                ent[1] += time.perf_counter() - t0
+            st.fused_decode_calls += 1
+            st.pad_waste += p2 - len(chunk_pools)
+            for r, p, pre, out in zip(reps[i:i + self.max_fused_group],
+                                      chunk_pools, chunk_pres, outs):
+                finished[r.name] = p._decode_finish(pre, *out)
+        return finished
 
+    def _decode_chunk_tuple(self, sig, pools: List[Pool],
+                            pres: List[dict]) -> Tuple[List[Any], int]:
+        """The PR-7 fused program: K traced sub-calls over a tuple of
+        per-pool argument tuples."""
+        k = len(pools)
+        p2 = self._pow2(k)
+        args_list = [pre["args"][1:] for pre in pres]
+        args_list.extend([args_list[0]] * (p2 - k))
+        pool0 = pools[0]
+
+        def build(pool0=pool0):
+            impl = pool0._decode_impl   # pure in cfg; shared across group
+
+            def make():
+                def fused(params, per_pool):
+                    return tuple(impl(params, *args) for args in per_pool)
+
+                return jax.jit(fused)
+
+            return _program(("decode", impl), make)
+
+        fn = self._fused_fn(("decode", sig, p2), build)
+        outs = fn(pool0.params, tuple(args_list))
+        return list(outs[:k]), p2
+
+    def _bank_coherent(self, pools: List[Pool], p2: int) -> Optional[CacheBank]:
+        """The chunk's persistent stacked bank, if every member still views
+        row i of ONE bank of exactly this pow2 size — the condition under
+        which last step's donated output tree IS this step's input stack."""
+        c0 = pools[0].cache
+        if not isinstance(c0, BankRow) or c0.bank.size != p2 or c0.index != 0:
+            return None
+        bank = c0.bank
+        for j, p in enumerate(pools[1:], start=1):
+            c = p.cache
+            if not isinstance(c, BankRow) or c.bank is not bank or c.index != j:
+                return None
+        return bank
+
+    def _bank_rows_common(self, pools: List[Pool]):
+        """(bank, row indices) if every member views SOME row of one common
+        bank — any order, any pow2 size. The membership-churn shape: last
+        step's group shrank/grew/reordered, so the rows are all still on one
+        device-resident bank, just not at identity positions."""
+        c0 = pools[0].cache
+        if not isinstance(c0, BankRow):
+            return None
+        bank = c0.bank
+        idx = [c0.index]
+        for p in pools[1:]:
+            c = p.cache
+            if not isinstance(c, BankRow) or c.bank is not bank:
+                return None
+            idx.append(c.index)
+        return bank, idx
+
+    def _decode_chunk_batched(self, sig, pools: List[Pool],
+                              pres: List[dict]) -> Tuple[List[Any], int]:
+        """ONE batched program per chunk: dense decode args stack along a
+        leading replica axis (pow2-padded with repeats of member 0) and run
+        through ``vmap_replicas`` (or ``shard_map_replicas``).
+
+        Fast path — the group's caches already live as rows of one
+        ``CacheBank`` from the previous step: the bank's stacked tree feeds
+        the program directly (donated; the output tree replaces it), so a
+        stable group pays ZERO stack/unstack work per step. Gather path —
+        the member set churned but every row still lives on ONE bank: an
+        index-array gather INSIDE the program re-stacks them (one dispatch,
+        no host materialise; the source bank is left intact for pools that
+        left the group). Slow path — rows scattered across banks or dense
+        trees (first fused step, group merge): each pool materialises its
+        row and the program stacks the K rows INSIDE jit into a fresh bank.
+
+        RNG keys ride as a (P,)-tuple pytree and stack inside jit; small
+        host args (tokens/lengths/active/temps) stack as numpy. Outputs come
+        back stacked; ``next_tok``/``lengths`` cross to the host as ONE
+        (P, B) transfer each, and every member's cache becomes a ``BankRow``
+        of the (new) bank — per-pool values byte-identical to the tuple
+        path's (vmap over independent rows is a layout change, not a math
+        change)."""
+        st = self.stats
+        k = len(pools)
+        p2 = self._pow2(k)
+        pad = p2 - k
+        # dense _decode_begin args: (params, toks, cache, lengths, active,
+        # key, temps) — stack everything but params/cache as host numpy
+        argrows = [pre["args"] for pre in pres]
+        toks = np.stack([a[1] for a in argrows]
+                        + [argrows[0][1]] * pad)
+        lengths = np.stack([a[3] for a in argrows]
+                           + [argrows[0][3]] * pad)
+        active = np.stack([a[4] for a in argrows]
+                          + [argrows[0][4]] * pad)
+        keys = tuple(a[5] for a in argrows) + (argrows[0][5],) * pad
+        temps = np.stack([a[6] for a in argrows]
+                         + [argrows[0][6]] * pad)
+        pool0 = pools[0]
+        layout = self.batch_layout
+        bank = self._bank_coherent(pools, p2)
+
+        if bank is not None:
             def build(pool0=pool0):
-                impl = pool0._decode_impl   # pure in cfg; shared across group
+                impl = pool0._decode_impl
 
                 def make():
-                    def fused(params, per_pool):
-                        return tuple(impl(params, *args) for args in per_pool)
+                    def fused(params, cache, toks, lengths, active, keys,
+                              temps):
+                        kstack = jnp.stack(keys)
+                        core = _batched_core(impl, layout, p2)
+                        return core(params, toks, cache, lengths, active,
+                                    kstack, temps)
 
-                    return jax.jit(fused)
+                    # donate the stacked cache: the bank swaps in the output
+                    return jax.jit(fused, donate_argnums=(1,))
 
-                return _program(("decode", impl), make)
+                return _program(("decode_batched", impl, layout, p2), make)
 
             fn = self._fused_fn(("decode", sig, p2), build)
-            outs = fn(pool0.params, tuple(args_list))
-            st.fused_decode_calls += 1
-            st.pad_waste += p2 - k
-            outs_all.extend(outs[:k])
-        return {r.name: p._decode_finish(pre, *out)
-                for r, p, pre, out in zip(reps, pools, pres, outs_all)}
+            next_tok, new_tree, new_lengths = fn(
+                pool0.params, bank.tree, toks, lengths, active, keys, temps)
+            bank.tree = new_tree
+        elif (common := self._bank_rows_common(pools)) is not None:
+            src, idx = common
+            rows_idx = np.asarray(idx + [idx[0]] * pad, dtype=np.int32)
+
+            def build(pool0=pool0, src_size=src.size):
+                impl = pool0._decode_impl
+
+                def make():
+                    def fused(params, src_tree, rows, toks, lengths, active,
+                              keys, temps):
+                        cache = jax.tree.map(lambda x: x[rows], src_tree)
+                        kstack = jnp.stack(keys)
+                        core = _batched_core(impl, layout, p2)
+                        return core(params, toks, cache, lengths, active,
+                                    kstack, temps)
+
+                    # no donation: pools that left the group still view
+                    # rows of the source bank
+                    return jax.jit(fused)
+
+                return _program(
+                    ("decode_batched_gather", impl, layout, p2, src_size),
+                    make)
+
+            fn = self._fused_fn(("decode_gather", sig, p2, src.size), build)
+            next_tok, new_tree, new_lengths = fn(
+                pool0.params, src.tree, rows_idx, toks, lengths, active,
+                keys, temps)
+            bank = CacheBank(new_tree, p2)
+            st.bank_gathers += 1
+        else:
+            # re-stack: materialise the member rows — ONE multi-row gather
+            # per source bank (never one per member; a group merge touches
+            # 2-3 banks, not K rows), dense trees are already rows — and
+            # stack INSIDE the program
+            sources: List[Tuple[CacheBank, List[Pool]]] = []
+            for p in pools:
+                c = p.cache
+                if isinstance(c, BankRow):
+                    for ent in sources:
+                        if ent[0] is c.bank:
+                            ent[1].append(p)
+                            break
+                    else:
+                        sources.append((c.bank, [p]))
+            for src, members in sources:
+                if len(members) == 1:
+                    members[0].materialize_cache()
+                    continue
+                n = len(members)
+                idx = np.asarray([p.cache.index for p in members],
+                                 dtype=np.int32)
+
+                def make(n=n):
+                    def take(tree, rows_ix):
+                        sub = jax.tree.map(lambda x: x[rows_ix], tree)
+                        return tuple(jax.tree.map(lambda x, i=i: x[i], sub)
+                                     for i in range(n))
+
+                    return jax.jit(take)
+
+                rows_trees = _program(("bank_rows_take", n), make)(
+                    src.tree, idx)
+                members[0].jit_dispatches += 1
+                for p, rt in zip(members, rows_trees):
+                    p.cache = rt
+            rows = tuple(p.cache for p in pools) + (pool0.cache,) * pad
+
+            def build(pool0=pool0):
+                impl = pool0._decode_impl
+
+                def make():
+                    def fused(params, rows, toks, lengths, active, keys,
+                              temps):
+                        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+                        kstack = jnp.stack(keys)
+                        core = _batched_core(impl, layout, p2)
+                        return core(params, toks, cache, lengths, active,
+                                    kstack, temps)
+
+                    # no donation: pad rows alias row 0
+                    return jax.jit(fused)
+
+                return _program(("decode_batched_restack", impl, layout, p2),
+                                make)
+
+            fn = self._fused_fn(("decode_restack", sig, p2), build)
+            next_tok, new_tree, new_lengths = fn(
+                pool0.params, rows, toks, lengths, active, keys, temps)
+            bank = CacheBank(new_tree, p2)
+            st.bank_rebuilds += 1
+        st.batched_decode_calls += 1
+        # one host transfer per stacked output, then row views per pool
+        next_np = np.asarray(next_tok)
+        len_np = np.asarray(new_lengths)
+        return [(next_np[j], BankRow(bank, j), len_np[j])
+                for j in range(k)], p2
+
 
     # ------------------------------------------------------ warm / autoscaler
     def _schedule_warm(self, r: "Replica"):

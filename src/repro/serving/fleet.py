@@ -496,8 +496,13 @@ class Fleet:
         *,
         router: Optional[Router] = None,
         autoscaler: Optional[Autoscaler] = None,
+        engine_opts: Optional[Dict[str, Any]] = None,
     ):
         self.replicas: List[Replica] = list(replicas)
+        # default EventDrivenFleet options for run_trace(engine="events");
+        # per-call engine_opts override key-by-key (FleetSpec.engine_opts
+        # lands here via from_spec, so a spec pins its replay mode)
+        self.engine_opts: Dict[str, Any] = dict(engine_opts or {})
         if not self.replicas:
             raise ValueError("a Fleet needs at least one replica")
         names = [r.name for r in self.replicas]
@@ -507,15 +512,42 @@ class Fleet:
         if len(virtuals) != 1:
             raise ValueError("fleet replicas must be all-virtual or all-wall")
         self.virtual = virtuals.pop()
-        if not self.virtual and len({id(c) for r in self.replicas
-                                     for c in (r.clock, r.prefill_clock)}) != 1:
+        # Clock-sharing audit, by LIVE identity (``is`` over objects we hold
+        # strong references to — never ``id()``, whose values outlive their
+        # object and can be recycled by the allocator onto a different
+        # clock): collect the distinct clock objects and which replicas use
+        # each.
+        clock_owners: List[Tuple[Any, set]] = []
+        for ri, r in enumerate(self.replicas):
+            for c in (r.clock, r.prefill_clock):
+                for ent in clock_owners:
+                    if ent[0] is c:
+                        ent[1].add(ri)
+                        break
+                else:
+                    clock_owners.append((c, {ri}))
+        if not self.virtual:
             # wall-clock replicas tick on real time; only one process clock
             # keeps their ledgers on one timeline
-            raise ValueError("wall-clock fleet replicas must share one clock")
-        # virtual replicas may share one clock (the single-replica Cluster
-        # facade: ticks serialise, exactly the pre-fleet behaviour) or hold
-        # one VirtualClock each (true device concurrency); the round barrier
-        # keeps either arrangement on one fleet timeline
+            if len(clock_owners) != 1:
+                raise ValueError("wall-clock fleet replicas must share one clock")
+        elif len(clock_owners) != 1:
+            # virtual replicas either share ONE clock fleet-wide (the
+            # single-replica Cluster facade: ticks serialise, exactly the
+            # pre-fleet behaviour) or keep their clocks private to a replica
+            # (per-replica or split prefill/decode timelines — what the
+            # event engine schedules against). A VirtualClock shared by SOME
+            # replicas but not all would let one replica's steps silently
+            # advance another's timeline mid-replay, corrupting both the
+            # barrier rounds and the event heap's stamps — reject it.
+            shared = sorted(ri for c, owners in clock_owners
+                            if len(owners) > 1 for ri in owners)
+            if shared:
+                names = [self.replicas[ri].name for ri in shared]
+                raise ValueError(
+                    f"virtual fleet clocks partially shared across replicas "
+                    f"{names}: share ONE clock fleet-wide or give each "
+                    f"replica its own clocks")
         self.clock = self.replicas[0].clock
         self.router: Router = router if router is not None else JoinShortestQueue()
         self.by_name: Dict[str, Replica] = {r.name: r for r in self.replicas}
@@ -578,6 +610,7 @@ class Fleet:
             router=make_router(spec.router, **spec.router_args),
             autoscaler=(make_autoscaler(spec.autoscaler)
                         if spec.autoscaler is not None else None),
+            engine_opts=spec.engine_opts,
         )
 
     # ------------------------------------------------------------------ api
@@ -895,8 +928,10 @@ class Fleet:
           takes one tick per round and the round syncs to the slowest.
 
         ``engine_opts`` are forwarded to the ``EventDrivenFleet``
-        constructor (``fusion_quantum_s``, ``fuse_prefill``, ``on_finish``,
-        ...); ignored by the barrier driver.
+        constructor (``fusion_quantum_s``, ``fuse_prefill``,
+        ``batch_replicas``, ``batch_layout``, ``on_finish``, ...) on top of
+        the fleet's own defaults (``FleetSpec.engine_opts``), overriding
+        key-by-key; ignored by the barrier driver.
         """
         if self.virtual and any(r.controller is None for r in self.replicas):
             raise ValueError(
@@ -907,7 +942,8 @@ class Fleet:
                              "expected 'events' or 'barrier'")
         if engine == "events" and self.virtual:
             from repro.serving.events import EventDrivenFleet
-            return EventDrivenFleet(self, **(engine_opts or {})).run(
+            opts = {**self.engine_opts, **(engine_opts or {})}
+            return EventDrivenFleet(self, **opts).run(
                 trace, max_steps=max_steps)
         pending = sorted(trace, key=lambda t: t.arrival_s)
         t_start = self.now_s()

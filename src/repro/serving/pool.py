@@ -54,8 +54,9 @@ plus one jitted page scatter, the copy-on-migrate).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -102,14 +103,65 @@ EOS = 0
 # compiles into one of each. The cached callables are pure functions of their
 # arguments (config and shape constants enter by closure FROM THE KEY), so
 # sharing cannot couple pool state.
-_JIT_CACHE: Dict[Tuple, Any] = {}
+#
+# The cache is a capped LRU, not a bare dict: the cached closures retain
+# whatever they close over, and a long pytest session or a benchmark sweep
+# that builds hundreds of fleet shapes would otherwise hold every program
+# (and transitively every XLA executable) ever compiled. Live pools keep
+# strong references to the callables they fetched, so eviction only drops
+# programs no current pool holds.
+_JIT_CACHE_CAP = 256
+_JIT_CACHE: "OrderedDict[Tuple, Any]" = OrderedDict()
 
 
 def _cached(key: Tuple, build: Callable[[], Any]) -> Any:
     fn = _JIT_CACHE.get(key)
     if fn is None:
         fn = _JIT_CACHE[key] = build()
+        while len(_JIT_CACHE) > _JIT_CACHE_CAP:
+            _JIT_CACHE.popitem(last=False)
+    else:
+        _JIT_CACHE.move_to_end(key)
     return fn
+
+
+def clear_program_caches() -> None:
+    """Drop every process-wide jitted-program cache: the per-pool
+    ``_JIT_CACHE`` here and the event engine's fused ``_PROGRAM_CACHE``.
+    Benchmark sweeps call this between sweep points so each point pays its
+    own compiles instead of riding (and retaining) the previous point's;
+    live pools keep the callables they already fetched, so clearing never
+    breaks an engine mid-replay — the next fetch just rebuilds."""
+    _JIT_CACHE.clear()
+    from repro.serving import events as _events
+    _events._PROGRAM_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# Stable params identity. Fused-dispatch group signatures need "same weights"
+# as a hashable token that (unlike ``id(params)``) can never be recycled onto
+# a different pool's weights by the allocator after a GC. Tokens are drawn
+# from one monotonic counter; the registry is a small LRU of live params
+# pytrees (plain dicts are not weakref-able) so repeated pool constructions
+# over the same object share a token without the registry pinning every
+# params ever seen. An evicted-and-re-registered params gets a FRESH token —
+# the failure mode is a missed fusion, never a wrong grouping.
+_PARAMS_TOKEN_CAP = 64
+_PARAMS_TOKENS: "OrderedDict[int, Tuple[Any, int]]" = OrderedDict()
+_params_token_counter = itertools.count(1)
+
+
+def params_token_for(params: Any) -> int:
+    """The stable monotonic token for this exact params object."""
+    ent = _PARAMS_TOKENS.get(id(params))
+    if ent is not None and ent[0] is params:
+        _PARAMS_TOKENS.move_to_end(id(params))
+        return ent[1]
+    tok = next(_params_token_counter)
+    _PARAMS_TOKENS[id(params)] = (params, tok)
+    while len(_PARAMS_TOKENS) > _PARAMS_TOKEN_CAP:
+        _PARAMS_TOKENS.popitem(last=False)
+    return tok
 
 
 def prefill_impl_for(cfg: ModelConfig, max_seq_len: int):
@@ -172,6 +224,71 @@ def _multi_scatter_impl(big_cache, small_caches, slots):
     for small, slot in zip(small_caches, slots):
         big_cache = _scatter_impl(big_cache, small, slot)
     return big_cache
+
+
+# ---------------------------------------------------------------------------
+# Replica-batched cache state. The event engine's batched fused decode keeps
+# the K pools of one fused group stacked along a leading replica axis in a
+# single device pytree, so each step is ONE vmapped program over the stack
+# instead of K traced sub-calls — and, crucially, the stack persists between
+# steps (re-stacking K caches every step would cost more than the fusion
+# saves). ``CacheBank`` is the mutable holder of that stacked pytree;
+# ``BankRow`` is what a member pool stores in ``self.cache`` between steps: a
+# (bank, row) view. All reads go THROUGH the bank, so the fast path can
+# donate ``bank.tree`` to XLA and swap in the output without invalidating any
+# member's view. A pool that needs its own dense row again (serial decode,
+# tuple-path fusion) materialises it with one jitted gather.
+
+
+class CacheBank:
+    """Stacked cache pytree for one batched fused-decode group: every leaf
+    carries a leading replica axis of ``size`` rows (pow2-padded; pad rows
+    hold inert repeats and are never read back)."""
+
+    __slots__ = ("tree", "size")
+
+    def __init__(self, tree: Any, size: int):
+        self.tree = tree
+        self.size = size
+
+
+class BankRow:
+    """A pool's between-steps view into a ``CacheBank``: row ``index`` of
+    ``bank.tree``. Opaque to accounting code — only the batched engine path
+    and the pool's materialise/scatter helpers look inside."""
+
+    __slots__ = ("bank", "index")
+
+    def __init__(self, bank: CacheBank, index: int):
+        self.bank = bank
+        self.index = index
+
+
+def _bank_row_impl(tree, row):
+    """Gather one replica row out of a stacked bank (materialisation)."""
+    return jax.tree.map(lambda x: x[row], tree)
+
+
+def _bank_scatter_impl(tree, small_cache, row, slot):
+    """Scatter a batch-1 prefilled cache row into slot ``slot`` of replica
+    row ``row`` of a stacked bank — the write-through twin of
+    ``_scatter_impl`` for pools whose cache currently lives in a bank.
+    Stacked leaves are (K, n_units, B, ...); the batch-1 row lands at
+    ``[row, :, slot]``."""
+    def scat(big, small):
+        start = (row, 0, slot) + (0,) * (big.ndim - 3)
+        return jax.lax.dynamic_update_slice(big, small[None].astype(big.dtype),
+                                            start)
+    return jax.tree.map(scat, tree, small_cache)
+
+
+def _bank_multi_scatter_impl(tree, small_caches, row, slots):
+    """K batch-1 rows into K slots of ONE replica row of a bank, chained in
+    order (padding repeats row 0 into slot 0, idempotent like the dense
+    multi-scatter)."""
+    for small, slot in zip(small_caches, slots):
+        tree = _bank_scatter_impl(tree, small, row, slot)
+    return tree
 
 
 # -------------------------------------------------------- queue primitives
@@ -432,6 +549,11 @@ class Pool:
     ):
         self.cfg = cfg
         self.params = params
+        # stable weights-identity token for fused-dispatch grouping: pools
+        # constructed over the SAME params object share it; a freed-and-
+        # rebuilt fleet can never collide with this one (monotonic counter,
+        # never recycled — unlike id(params))
+        self.params_token = params_token_for(params)
         self.role = role
         self.max_batch = max_batch
         self.max_seq_len = max_seq_len
@@ -636,6 +758,28 @@ class Pool:
 
         return jax.lax.cond(
             jnp.any(temperature > 0.0), sampled, lambda _: greedy, None)
+
+    # ------------------------------------------------------ params identity
+    def set_params(self, params: Any) -> None:
+        """Swap this pool's weights and refresh ``params_token`` so fused
+        grouping immediately reflects the new identity."""
+        self.params = params
+        self.params_token = params_token_for(params)
+
+    # ----------------------------------------------------- bank-view cache
+    def cache_is_view(self) -> bool:
+        return isinstance(self.cache, BankRow)
+
+    def materialize_cache(self) -> None:
+        """Replace a ``BankRow`` view with this pool's own dense cache row
+        (one jitted gather). No-op when the cache is already concrete."""
+        if not isinstance(self.cache, BankRow):
+            return
+        row = self.cache
+        fn = _cached(("bank_row_jit",),
+                     lambda: jax.jit(_bank_row_impl))
+        self.cache = fn(row.bank.tree, np.int32(row.index))
+        self.jit_dispatches += 1
 
     # ------------------------------------------------------- energy plumbing
     def set_operating_point(self, op: OperatingPoint, prefill_op: Optional[OperatingPoint] = None):
@@ -1183,6 +1327,15 @@ class Pool:
             if se:
                 self.prefix_stats.saved_migrate_bytes += (
                     se * self.kv_block_size * self._kv_token_bytes)
+        elif isinstance(self.cache, BankRow):
+            # write THROUGH the bank: the stacked tree is donated and
+            # replaced, so every other member pool's view follows along
+            row = self.cache
+            fn = _cached(("bank_scatter_jit",),
+                         lambda: jax.jit(_bank_scatter_impl,
+                                         donate_argnums=(0,)))
+            row.bank.tree = fn(row.bank.tree, cache1,
+                               np.int32(row.index), np.int32(slot))
         else:
             self.cache = self._jit_scatter(self.cache, cache1, slot)
         self.jit_dispatches += 1
@@ -1210,24 +1363,38 @@ class Pool:
         p = 1 << (len(rows) - 1).bit_length()
         rows.extend([rows[0]] * (p - len(rows)))
         pad_slots.extend([pad_slots[0]] * (p - len(pad_slots)))
-        fn = _cached(
-            ("scatter_multi_jit", self.cfg, self.max_seq_len, p),
-            lambda: jax.jit(_multi_scatter_impl, donate_argnums=(0,)))
-        self.cache = fn(self.cache, tuple(rows), tuple(pad_slots))
+        if isinstance(self.cache, BankRow):
+            view = self.cache
+            fn = _cached(
+                ("bank_scatter_multi_jit", p),
+                lambda: jax.jit(_bank_multi_scatter_impl, donate_argnums=(0,)))
+            view.bank.tree = fn(view.bank.tree, tuple(rows),
+                                np.int32(view.index), tuple(pad_slots))
+        else:
+            fn = _cached(
+                ("scatter_multi_jit", self.cfg, self.max_seq_len, p),
+                lambda: jax.jit(_multi_scatter_impl, donate_argnums=(0,)))
+            self.cache = fn(self.cache, tuple(rows), tuple(pad_slots))
         self.jit_dispatches += 1
         return slots
 
     def _req_eos(self, req: Request) -> int:
         return self.eos_token_id if req.eos_token_id is None else req.eos_token_id
 
-    def _decode_begin(self) -> Optional[dict]:
+    def _decode_begin(self, *, keep_view: bool = False) -> Optional[dict]:
         """Host-side first half of ``decode_once``: block-table growth,
         active mask, RNG split, and the jitted-call argument tuple. Returns
         ``None`` when no slot is live. ``decode_once`` composes this with
         the jit call and ``_decode_finish``; the split exists so the fleet's
         event engine can run many homogeneous pools' decode updates through
         ONE fused jitted step (each pool still splits its own key, so token
-        streams are independent of how steps are grouped)."""
+        streams are independent of how steps are grouped).
+
+        A cache held as a ``BankRow`` view is materialised here by default
+        so serial and tuple-fused consumers see a concrete pytree in
+        ``args``; the batched engine path passes ``keep_view=True`` and
+        resolves the view itself (either reusing the bank's stacked tree
+        directly or gathering rows inside its own program)."""
         if self.paged and any(r is not None for r in self.slot_req):
             self._grow_tables()
             if self._prefix is not None:
@@ -1235,6 +1402,8 @@ class Pool:
         active = self.active_mask()
         if not active.any():
             return None
+        if not keep_view:
+            self.materialize_cache()
         self._ensure_decode_state()
         self._key, sub = jax.random.split(self._key)
         t0 = self.clock()

@@ -211,14 +211,29 @@ class ReplicaSpec:
         return cls(**d)
 
 
+# EventDrivenFleet constructor options a FleetSpec may pin (runtime-only
+# options like on_finish stay out: a spec must stay JSON-round-trippable)
+ENGINE_OPT_KEYS = (
+    "fast_path_min", "fusion_quantum_s", "fuse_prefill", "max_fused_group",
+    "fused_cache_cap", "batch_replicas", "batch_layout", "time_dispatch",
+)
+
+
 @dataclasses.dataclass(frozen=True)
 class FleetSpec:
-    """N replicas + the routing policy in front of them."""
+    """N replicas + the routing policy in front of them.
+
+    ``engine_opts`` pins default ``EventDrivenFleet`` options for
+    ``run_trace(engine="events")`` replays of this spec (e.g.
+    ``{"batch_replicas": False}`` to opt a fleet out of the batched replica
+    axis, or a ``fusion_quantum_s`` tuned to its drift); per-call
+    ``engine_opts`` still override key-by-key."""
 
     replicas: Tuple[ReplicaSpec, ...]
     router: str = "jsq"
     router_args: Dict[str, Any] = dataclasses.field(default_factory=dict)
     autoscaler: Optional[AutoscalerSpec] = None
+    engine_opts: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         object.__setattr__(self, "replicas", tuple(self.replicas))
@@ -226,6 +241,15 @@ class FleetSpec:
         names = [r.name for r in self.replicas]
         _require(len(set(names)) == len(names),
                  f"FleetSpec replica names must be unique, got {names}")
+        bad = sorted(set(self.engine_opts) - set(ENGINE_OPT_KEYS))
+        _require(not bad,
+                 f"unknown FleetSpec.engine_opts keys {bad}; "
+                 f"have {sorted(ENGINE_OPT_KEYS)}")
+        try:
+            json.dumps(self.engine_opts)
+        except (TypeError, ValueError):
+            _require(False, "FleetSpec.engine_opts values must be "
+                            "JSON-serializable")
         from repro.serving.router import ROUTERS
         _require(self.router in ROUTERS,
                  f"unknown router {self.router!r}; have {sorted(ROUTERS)}")
